@@ -1,0 +1,38 @@
+"""Fig. 3 — performance models of the five representative tasks.
+
+Runs Algorithm 1 (constrained thread x rate sweep with the latency-slope
+stability test) against the analytic contention runners and prints each
+task's profile; anchors are cross-checked against the paper's published
+curves (which are also shipped as PAPER_MODELS).
+"""
+
+from __future__ import annotations
+
+from repro.core import PAPER_MODELS
+from repro.core.profiler import ANALYTIC_PROFILES, profile_task
+
+from .common import Table
+
+
+def run() -> dict:
+    tbl = Table(["task", "tau", "peak_rate_t/s", "cpu%", "mem%"])
+    built = {}
+    for kind in ANALYTIC_PROFILES:
+        m = profile_task(kind)
+        built[kind] = m
+        for p in m.points:
+            tbl.add(kind, p.tau, p.rate, round(p.cpu * 100, 1),
+                    round(p.mem * 100, 1))
+    tbl.show("Fig. 3: task performance models (Alg. 1, analytic runners)")
+
+    anchor = Table(["task", "omega_hat(built)", "omega_hat(paper)",
+                    "tau_hat(built)", "tau_hat(paper)"])
+    for kind in ANALYTIC_PROFILES:
+        anchor.add(kind, built[kind].omega_hat, PAPER_MODELS[kind].omega_hat,
+                   built[kind].tau_hat, PAPER_MODELS[kind].tau_hat)
+    anchor.show("Fig. 3 anchors: built vs paper-published")
+    return {"tasks_profiled": len(built)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Figs. 9-12 — predictability on a fixed cluster of five D3 VMs (20 slots).
+
+For the 5 scheduler pairs (LSA+{DSM,RSM}, MBA+{DSM,RSM,SAM}):
+* planned rate: highest rate whose plan fits 20 slots (§8.5 protocol)
+* predicted rate: §8.5 model prediction for the enacted mapping
+* actual rate: simulator's highest stable rate
+* per-VM CPU%/mem%: predicted vs actual (simulated) at the actual rate
+
+Reports the R^2 correlations of Figs. 9-12.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (MICRO_DAGS, DataflowSimulator, VM, paper_library,
+                        plan, predict_max_rate, predict_resources)
+from repro.core.scheduler import max_planned_rate
+from repro.core.simulator import measured_resources
+
+from .common import Table, r_squared
+
+PAIRS = (("lsa", "dsm"), ("lsa", "rsm"),
+         ("mba", "dsm"), ("mba", "rsm"), ("mba", "sam"))
+FIXED_VMS = [VM(i, 4) for i in range(5)]          # five D3 VMs = 20 slots
+BUDGET = 20
+
+
+def run(*, sim_duration: float = 12.0) -> dict:
+    lib = paper_library()
+    tbl = Table(["dag", "pair", "planned", "predicted", "actual",
+                 "pred/actual"])
+    planned_all: List[float] = []
+    pred_all: List[float] = []
+    actual_all: List[float] = []
+    cpu_pred_all: List[float] = []
+    cpu_act_all: List[float] = []
+    mem_pred_all: List[float] = []
+    mem_act_all: List[float] = []
+
+    for name, mk in MICRO_DAGS.items():
+        for alloc_name, map_name in PAIRS:
+            dag = mk()
+            planned = max_planned_rate(dag, lib, allocator=alloc_name,
+                                       mapper=map_name, budget_slots=BUDGET)
+            if planned <= 0:
+                continue
+            s = plan(dag, planned, lib, allocator=alloc_name,
+                     mapper=map_name, fixed_vms=FIXED_VMS)
+            predicted = predict_max_rate(dag, s.allocation, s.mapping, lib)
+            sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+            actual = sim.max_stable_rate(duration=sim_duration, dt=0.1)
+            tbl.add(name, f"{alloc_name}+{map_name}", round(planned, 0),
+                    round(predicted, 1), round(actual, 1),
+                    round(predicted / max(actual, 1e-9), 3))
+            planned_all.append(planned)
+            pred_all.append(predicted)
+            actual_all.append(actual)
+            # per-VM resources at the actual stable rate (Figs. 11-12)
+            rp = predict_resources(dag, s.allocation, s.mapping, lib, actual)
+            ca, ma = measured_resources(dag, s.allocation, s.mapping, lib,
+                                        actual)
+            for vm in FIXED_VMS:
+                cpu_pred_all.append(rp.vm_cpu[vm.id])
+                cpu_act_all.append(ca[vm.id])
+                mem_pred_all.append(rp.vm_mem[vm.id])
+                mem_act_all.append(ma[vm.id])
+
+    tbl.show("Figs. 9-10: planned / predicted / actual rates on 20 slots")
+    r2_planned = r_squared(actual_all, planned_all)
+    r2_pred = r_squared(actual_all, pred_all)
+    r2_cpu = r_squared(cpu_act_all, cpu_pred_all)
+    r2_mem = r_squared(mem_act_all, mem_pred_all)
+    print(f"\nR^2 planned-vs-actual:   {r2_planned: .3f}  (paper: 0.55-0.69)")
+    print(f"R^2 predicted-vs-actual: {r2_pred: .3f}  (paper: 0.71-0.95)")
+    print(f"R^2 CPU% per VM:         {r2_cpu: .3f}  (paper: >= 0.81)")
+    print(f"R^2 mem% per VM:         {r2_mem: .3f}  (paper: >= 0.55)")
+    return {"r2_planned": round(r2_planned, 3), "r2_predicted": round(r2_pred, 3),
+            "r2_cpu": round(r2_cpu, 3), "r2_mem": round(r2_mem, 3)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""§Roofline — the three roofline terms per (arch x shape) from the dry-run.
+
+Reads the JSON artifacts produced by ``python -m repro.launch.dryrun`` (the
+single-pod mesh is the roofline baseline per the assignment) and prints the
+full table: compute / memory / collective seconds, dominant term, and the
+MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Table
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(mesh_prefix: str = "pod16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"{mesh_prefix}-*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> dict:
+    cells = load_cells()
+    if not cells:
+        print(f"\n== §Roofline: no dry-run artifacts under {DRYRUN_DIR} — "
+              "run `PYTHONPATH=src python -m repro.launch.dryrun` first ==")
+        return {"cells": 0}
+    tbl = Table(["arch", "shape", "status", "mem/dev GiB", "compute_ms",
+                 "hbm_ms", "coll_ms", "dominant", "useful", "bound_ms"])
+    n_ok = 0
+    for c in cells:
+        if c["status"] != "ok":
+            tbl.add(c["arch"], c["shape"], c["status"], "-", "-", "-", "-",
+                    "-", "-", "-")
+            continue
+        n_ok += 1
+        r = c["roofline"]
+        tbl.add(c["arch"], c["shape"], "ok",
+                round(c["memory"]["total_per_device"] / 2**30, 2),
+                round(r["compute_s"] * 1e3, 2),
+                round(r["memory_s"] * 1e3, 2),
+                round(r["collective_s"] * 1e3, 2),
+                r["dominant"],
+                round(c["useful_flops_ratio"] or 0, 3),
+                round(r["step_s_bound"] * 1e3, 2))
+    tbl.show("§Roofline: per-cell terms (single-pod 16x16)")
+    return {"cells": len(cells), "ok": n_ok}
+
+
+if __name__ == "__main__":
+    run()

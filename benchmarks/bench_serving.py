@@ -1,0 +1,41 @@
+"""Framework benchmark — model-driven serving allocation (paper technique
+applied to disaggregated LM serving).
+
+Prints the analytic stage PerfModels (tokens/s vs chips-per-host — the LM
+analogue of Fig. 3's thread curves) and the MBA+SAM chip plans across
+request rates for a representative arch.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.serve.planner import plan_serving, serving_perf_models
+
+from .common import Table
+
+ARCH = "qwen2.5-32b"
+
+
+def run() -> dict:
+    cfg = get_config(ARCH)
+    models = serving_perf_models(cfg, prompt_len=2048, gen_len=256, batch=32)
+    tbl = Table(["stage", "chips_on_host", "rate", "hbm%"])
+    for stage in ("prefill", "decode"):
+        m = models[stage]
+        for p in m.points:
+            tbl.add(stage, p.tau, round(p.rate, 2), round(p.mem * 100, 1))
+    tbl.show(f"serving stage perf models ({ARCH})")
+
+    tbl2 = Table(["req_rate", "prefill_chips", "decode_chips", "hosts"])
+    plans = {}
+    for rate in (0.5, 1, 2, 4, 8):
+        sp = plan_serving(cfg, request_rate=rate, prompt_len=2048,
+                          gen_len=256)
+        plans[rate] = sp
+        tbl2.add(rate, sp.prefill_chips, sp.decode_chips, sp.hosts)
+    tbl2.show("MBA+SAM serving plans vs request rate")
+    return {"chips_at_8rps": plans[8].prefill_chips + plans[8].decode_chips}
+
+
+if __name__ == "__main__":
+    run()

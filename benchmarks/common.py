@@ -1,0 +1,50 @@
+"""Benchmark helpers: timing, CSV rows, R^2."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+
+def timed(fn: Callable[[], object]) -> Tuple[object, float]:
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6   # us
+
+
+def r_squared(actual: Sequence[float], predicted: Sequence[float]) -> float:
+    n = len(actual)
+    if n < 2:
+        return 1.0
+    mean = sum(actual) / n
+    ss_tot = sum((a - mean) ** 2 for a in actual)
+    ss_res = sum((a - p) ** 2 for a, p in zip(actual, predicted))
+    if ss_tot == 0:
+        return 1.0
+    return 1.0 - ss_res / ss_tot
+
+
+class Table:
+    """Simple aligned-text table printer."""
+
+    def __init__(self, headers: Sequence[str]):
+        self.headers = list(headers)
+        self.rows: List[List[str]] = []
+
+    def add(self, *cells):
+        self.rows.append([f"{c:.4g}" if isinstance(c, float) else str(c)
+                          for c in cells])
+
+    def render(self) -> str:
+        widths = [max(len(h), *(len(r[i]) for r in self.rows)) if self.rows
+                  else len(h) for i, h in enumerate(self.headers)]
+        lines = ["  ".join(h.ljust(w) for h, w in zip(self.headers, widths))]
+        lines.append("  ".join("-" * w for w in widths))
+        for r in self.rows:
+            lines.append("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+        return "\n".join(lines)
+
+    def show(self, title: str = "") -> None:
+        if title:
+            print(f"\n== {title} ==")
+        print(self.render())

@@ -1,0 +1,43 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark after
+each benchmark's own detailed table.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from . import (bench_app_dags, bench_latency, bench_micro_dags,
+               bench_optimized, bench_perfmodels, bench_predictability,
+               bench_roofline, bench_serving)
+from .common import timed
+
+BENCHES = [
+    ("fig3_perfmodels", bench_perfmodels.run),
+    ("fig7_micro_dags", bench_micro_dags.run),
+    ("fig8_app_dags", bench_app_dags.run),
+    ("fig9_12_predictability", bench_predictability.run),
+    ("fig13_latency", bench_latency.run),
+    ("serving_planner", bench_serving.run),
+    ("roofline_table", bench_roofline.run),
+    ("perf_optimized", bench_optimized.run),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = []
+    for name, fn in BENCHES:
+        if only and only not in name:
+            continue
+        derived, us = timed(fn)
+        rows.append((name, us, derived))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{json.dumps(derived, separators=(';', ':'))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Assigned architecture configs (one module per arch) + shapes + registry."""
+
+from .base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+from . import (minicpm_2b, minitron_4b, qwen2_5_32b, qwen2_72b,
+               moonshot_v1_16b_a3b, kimi_k2_1t_a32b, zamba2_1_2b,
+               whisper_large_v3, mamba2_370m, phi_3_vision_4_2b)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (minicpm_2b, minitron_4b, qwen2_5_32b, qwen2_72b,
+              moonshot_v1_16b_a3b, kimi_k2_1t_a32b, zamba2_1_2b,
+              whisper_large_v3, mamba2_370m, phi_3_vision_4_2b)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}") from None

@@ -1,0 +1,29 @@
+"""Core of the reproduction: the paper's model-driven scheduler.
+
+Public surface:
+
+* DAG definitions and the paper's evaluation dataflows (``dag``)
+* performance models + Alg. 1 builder (``perfmodel``), live/analytic
+  profilers (``profiler``)
+* LSA / MBA allocation (``allocation``)
+* DSM / RSM / SAM mapping + VM acquisition (``mapping``)
+* end-to-end planning (``scheduler``), model-based prediction
+  (``predictor``) and the fluid simulator (``simulator``)
+"""
+
+from .dag import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Edge, Routing,
+                  Task, diamond_dag, finance_dag, grid_dag, linear_dag,
+                  star_dag, traffic_dag)
+from .perfmodel import (ModelLibrary, ModelPoint, PAPER_MODELS, PerfModel,
+                        TrialResult, build_perf_model, latency_slope,
+                        paper_library)
+from .allocation import ALLOCATORS, Allocation, TaskAllocation, allocate_lsa, allocate_mba
+from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
+                      Mapping, SlotId, Thread, VM, acquire_vms, map_dsm,
+                      map_rsm, map_sam)
+from .routing import RoutingPolicy
+from .predictor import predict_max_rate, predict_resources
+from .scheduler import Schedule, max_planned_rate, plan, replan_on_failure
+from .simulator import DataflowSimulator, SimResult, measured_resources
+
+__all__ = [k for k in dir() if not k.startswith("_")]

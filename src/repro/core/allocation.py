@@ -1,0 +1,148 @@
+"""Resource allocation (paper §6): LSA (Alg. 2) and MBA (Alg. 3).
+
+Both return, per task, the thread count ``tau_i`` and the estimated CPU% /
+memory% ``(c_i, m_i)`` in units of slots (1.0 == one full slot), plus the
+DAG-level slot estimate::
+
+    rho = max(ceil(sum_i c_i), ceil(sum_i m_i))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional
+
+from .dag import Dataflow
+from .perfmodel import ModelLibrary, PerfModel
+
+
+@dataclasses.dataclass
+class TaskAllocation:
+    """Allocation for one task: threads + estimated resources (slot units)."""
+
+    task: str
+    kind: str
+    threads: int
+    cpu: float
+    mem: float
+    rate: float                 # input rate this task must sustain
+    # MBA bookkeeping consumed by SAM: threads per full bundle and the
+    # number of full bundles allocated (0 for LSA).
+    bundle_size: int = 0
+    full_bundles: int = 0
+
+
+@dataclasses.dataclass
+class Allocation:
+    """Whole-DAG allocation result."""
+
+    dag: str
+    omega: float
+    algorithm: str
+    tasks: Dict[str, TaskAllocation]
+
+    @property
+    def total_cpu(self) -> float:
+        return sum(t.cpu for t in self.tasks.values())
+
+    @property
+    def total_mem(self) -> float:
+        return sum(t.mem for t in self.tasks.values())
+
+    @property
+    def total_threads(self) -> int:
+        return sum(t.threads for t in self.tasks.values())
+
+    @property
+    def slots(self) -> int:
+        """rho — the paper's slot estimate (max of CPU- and memory-implied)."""
+        return max(math.ceil(self.total_cpu - 1e-9),
+                   math.ceil(self.total_mem - 1e-9), 1)
+
+
+def _static_allocation(name: str, model, rate: float) -> TaskAllocation:
+    """Fixed allocation for source/sink-style tasks (§8.3): one thread,
+    full static CPU%/mem% regardless of rate."""
+    return TaskAllocation(name, model.kind, 1, model.C(1), model.M(1), rate,
+                          bundle_size=1, full_bundles=0)
+
+
+def allocate_lsa(dag: Dataflow, omega: float, models: ModelLibrary) -> Allocation:
+    """Linear Scaling Allocation (Alg. 2).
+
+    Assumes one thread's peak rate / resources extrapolate linearly: add one
+    thread (and one thread's worth of resources) per ``omega_bar`` of input
+    rate; the trailing fraction scales resources down proportionally.
+    """
+    rates = dag.get_rates(omega)
+    out: Dict[str, TaskAllocation] = {}
+    for t in dag.topo_order():
+        model = models[t.kind]
+        if model.static:
+            out[t.name] = _static_allocation(t.name, model, rates[t.name])
+            continue
+        w = rates[t.name]
+        w_bar = model.omega_bar
+        tau, c, m = 0, 0.0, 0.0
+        while w >= w_bar and w_bar > 0:
+            tau += 1
+            w -= w_bar
+            c += model.C(1)
+            m += model.M(1)
+        if w > 1e-12:
+            tau += 1
+            c += model.C(1) * (w / w_bar)
+            m += model.M(1) * (w / w_bar)
+        out[t.name] = TaskAllocation(t.name, t.kind, tau, c, m, rates[t.name])
+    return Allocation(dag.name, omega, "lsa", out)
+
+
+def allocate_mba(dag: Dataflow, omega: float, models: ModelLibrary) -> Allocation:
+    """Model Based Allocation (Alg. 3).
+
+    Allocates *full bundles* of ``tau_hat`` threads at the task's best
+    single-slot operating point ``omega_hat``, charging a whole slot (100%
+    CPU and memory) per bundle — the task cannot exploit the leftover
+    resources of a saturated slot, and co-locating foreign threads there
+    would break the model.  The trailing rate below ``omega_hat`` gets the
+    smallest adequate thread count with model-interpolated resources.
+    """
+    rates = dag.get_rates(omega)
+    out: Dict[str, TaskAllocation] = {}
+    for t in dag.topo_order():
+        model = models[t.kind]
+        if model.static:
+            out[t.name] = _static_allocation(t.name, model, rates[t.name])
+            continue
+        w = rates[t.name]
+        w_hat = model.omega_hat
+        tau_hat = model.tau_hat
+        tau, c, m = 0, 0.0, 0.0
+        bundles = 0
+        while w >= w_hat and w_hat > 0:
+            tau += tau_hat
+            bundles += 1
+            w -= w_hat
+            c += 1.0
+            m += 1.0
+        if w > 1e-12:
+            tau_prime = model.T(w)
+            assert tau_prime is not None and tau_prime >= 1, \
+                f"residual rate {w} exceeds omega_hat for {t.kind}"
+            tau += tau_prime
+            if tau_prime > 1:
+                c += model.C(tau_prime)
+                m += model.M(tau_prime)
+            else:
+                c += model.C(1) * (w / model.I(1))
+                m += model.M(1) * (w / model.I(1))
+        out[t.name] = TaskAllocation(t.name, t.kind, tau, c, m, rates[t.name],
+                                     bundle_size=tau_hat, full_bundles=bundles)
+    return Allocation(dag.name, omega, "mba", out)
+
+
+ALLOCATORS = {
+    "lsa": allocate_lsa,
+    "mba": allocate_mba,
+}

@@ -1,0 +1,365 @@
+"""Resource mapping (paper §7): acquisition (§7.1), DSM, RSM, SAM.
+
+Thread-to-slot mapping operates on:
+
+* :class:`VM` — a host with ``p_j`` homogeneous slots (one core + memory
+  quantum each).  On the TPU adaptation a "VM" is an ICI-connected host and a
+  "slot" is one chip.
+* :class:`Thread` — one data-parallel executor ``r_i^k`` of task ``t_i``.
+* :class:`Mapping` — the function ``M : R -> S`` plus residual-capacity
+  bookkeeping, so predictors/simulators can inspect per-slot co-location.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from collections import defaultdict
+from typing import Dict, Iterable, List, Mapping as TMapping, Optional, Sequence, Tuple
+
+from .allocation import Allocation, TaskAllocation
+from .dag import Dataflow
+from .perfmodel import ModelLibrary
+
+
+class InsufficientResourcesError(RuntimeError):
+    """Raised when a resource-aware mapper cannot place a thread (RSM line 16,
+    SAM lines 10/19).  The scheduler reacts by acquiring one more slot and
+    retrying (§8.4)."""
+
+    def __init__(self, task: str, message: str = ""):
+        super().__init__(message or f"insufficient resources for task {task!r}")
+        self.task = task
+
+
+@dataclasses.dataclass(frozen=True)
+class Thread:
+    task: str
+    index: int
+
+    def __repr__(self) -> str:
+        return f"{self.task}#{self.index}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotId:
+    vm: int
+    slot: int
+
+    def __repr__(self) -> str:
+        return f"s{self.vm}.{self.slot}"
+
+
+@dataclasses.dataclass
+class VM:
+    id: int
+    num_slots: int
+    rack: int = 0
+
+    def slot_ids(self) -> List[SlotId]:
+        return [SlotId(self.id, l) for l in range(self.num_slots)]
+
+
+def nw_dist(ref: Optional[VM], cand: VM) -> float:
+    """R-Storm network latency multiplier: 0 same VM, 0.5 same rack, 1.0
+    otherwise (§7.3)."""
+    if ref is None or ref.id == cand.id:
+        return 0.0
+    if ref.rack == cand.rack:
+        return 0.5
+    return 1.0
+
+
+# ---------------------------------------------------------------------------
+# §7.1 Resource acquisition.
+# ---------------------------------------------------------------------------
+
+#: Azure D-series-like sizes used throughout the paper: D3=4, D2=2, D1=1 slots.
+DEFAULT_VM_SIZES: Tuple[int, ...] = (4, 2, 1)
+
+
+def acquire_vms(rho: int, vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+                *, rack_size: int = 32) -> List[VM]:
+    """Acquire VMs covering ``rho`` slots: as many largest-size VMs as fit,
+    then the smallest size that covers the remainder (§7.1).  ``rack_size``
+    VMs share a rack (all in one rack for the paper's PaaS setting when the
+    count is small)."""
+    if rho <= 0:
+        raise ValueError("rho must be positive")
+    sizes = sorted(set(vm_sizes), reverse=True)
+    largest = sizes[0]
+    counts: List[int] = []
+    n_large, rem = divmod(rho, largest)
+    counts = [largest] * n_large
+    if rem:
+        fitting = [s for s in sorted(sizes) if s >= rem]
+        counts.append(fitting[0] if fitting else largest)
+    vms = [VM(i, s, rack=i // rack_size) for i, s in enumerate(counts)]
+    return vms
+
+
+# ---------------------------------------------------------------------------
+# Mapping result with capacity bookkeeping.
+# ---------------------------------------------------------------------------
+
+class Mapping:
+    """Thread -> slot assignment plus residual-capacity accounting."""
+
+    def __init__(self, vms: Sequence[VM]):
+        self.vms: List[VM] = list(vms)
+        self.assignment: Dict[Thread, SlotId] = {}
+        # Residual capacity views (fractions of a slot).
+        self.slot_cpu: Dict[SlotId, float] = {}
+        self.slot_mem: Dict[SlotId, float] = {}
+        for vm in self.vms:
+            for s in vm.slot_ids():
+                self.slot_cpu[s] = 1.0
+                self.slot_mem[s] = 1.0
+
+    # -- assignment ----------------------------------------------------------
+    def assign(self, thread: Thread, slot: SlotId,
+               cpu: float = 0.0, mem: float = 0.0) -> None:
+        if thread in self.assignment:
+            raise ValueError(f"{thread} already mapped")
+        self.assignment[thread] = slot
+        self.slot_cpu[slot] -= cpu
+        self.slot_mem[slot] -= mem
+
+    # -- views ----------------------------------------------------------------
+    def slots(self) -> List[SlotId]:
+        return [s for vm in self.vms for s in vm.slot_ids()]
+
+    def used_slots(self) -> List[SlotId]:
+        used = {s for s in self.assignment.values()}
+        return [s for s in self.slots() if s in used]
+
+    def threads_on_slot(self, slot: SlotId) -> List[Thread]:
+        return [t for t, s in self.assignment.items() if s == slot]
+
+    def slot_task_counts(self) -> Dict[SlotId, Dict[str, int]]:
+        """Per-slot thread counts grouped by task — the co-location structure
+        consumed by the predictor/simulator."""
+        out: Dict[SlotId, Dict[str, int]] = defaultdict(lambda: defaultdict(int))
+        for t, s in self.assignment.items():
+            out[s][t.task] += 1
+        return {s: dict(d) for s, d in out.items()}
+
+    def vm_cpu_available(self, vm: VM) -> float:
+        return sum(self.slot_cpu[s] for s in vm.slot_ids())
+
+    def vm_mem_available(self, vm: VM) -> float:
+        return sum(self.slot_mem[s] for s in vm.slot_ids())
+
+    def mixed_slots(self) -> int:
+        """Number of slots hosting threads of more than one task (SAM bounds
+        this by |V|, §7.4)."""
+        return sum(1 for counts in self.slot_task_counts().values()
+                   if len(counts) > 1)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Mapping(threads={len(self.assignment)}, "
+                f"slots={len(self.used_slots())}/{len(self.slots())})")
+
+
+def make_threads(alloc: Allocation) -> List[Thread]:
+    """Materialize the thread set R from an allocation."""
+    threads: List[Thread] = []
+    for name, ta in alloc.tasks.items():
+        threads.extend(Thread(name, k) for k in range(ta.threads))
+    return threads
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4: Default Storm Mapping (round-robin).
+# ---------------------------------------------------------------------------
+
+def map_dsm(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
+            models: Optional[ModelLibrary] = None) -> Mapping:
+    """Round-robin threads over slots, resource-oblivious (Alg. 4)."""
+    mapping = Mapping(vms)
+    slots = mapping.slots()
+    threads = make_threads(alloc)
+    for n, thread in enumerate(threads):
+        mapping.assign(thread, slots[n % len(slots)])
+    return mapping
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 5: R-Storm Mapping (resource- and network-aware best fit).
+# ---------------------------------------------------------------------------
+
+def map_rsm(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
+            models: ModelLibrary, *,
+            w_cpu: float = 1.0, w_mem: float = 1.0, w_net: float = 1.0) -> Mapping:
+    """R-Storm mapping (Alg. 5).
+
+    One sweep maps one thread of every task in topological order; candidate
+    VMs are sorted by the Euclidean distance between the VM's *available*
+    resources and the thread's single-thread needs (``c_bar, m_bar``), plus a
+    network term from the last-mapped VM.  Storm semantics: CPU% pools across
+    a VM's slots, memory% binds per slot.
+    """
+    mapping = Mapping(vms)
+    # VM-level CPU pool (Storm lets threads use any core of the VM).
+    vm_cpu: Dict[int, float] = {vm.id: vm.num_slots * 1.0 for vm in vms}
+    vm_mem: Dict[int, float] = {vm.id: vm.num_slots * 1.0 for vm in vms}
+    remaining: Dict[str, int] = {n: ta.threads for n, ta in alloc.tasks.items()}
+    next_idx: Dict[str, int] = {n: 0 for n in alloc.tasks}
+    ref: Optional[VM] = vms[0] if vms else None
+    order = [t.name for t in dag.topo_order()]
+
+    while sum(remaining.values()) > 0:
+        progressed = False
+        for name in order:
+            if remaining[name] <= 0:
+                continue
+            ta = alloc.tasks[name]
+            model = models[ta.kind]
+            if ta.bundle_size > 1:
+                # MBA-style allocation: charge the model-amortized per-thread
+                # resources at the bundle operating point (a 50-thread blob
+                # bundle uses ~96% of a slot, not 50 x 23.9% — §8.5 maps
+                # 25-30 such threads per slot under RSM)
+                c_bar = model.C(ta.bundle_size) / ta.bundle_size
+                m_bar = model.M(ta.bundle_size) / ta.bundle_size
+            else:
+                c_bar, m_bar = model.C(1), model.M(1)
+            # Sort VMs by the R-Storm distance on available resources.
+            def dist(vm: VM) -> float:
+                return (w_mem * (vm_mem[vm.id] - m_bar) ** 2
+                        + w_cpu * (vm_cpu[vm.id] - c_bar) ** 2
+                        + w_net * nw_dist(ref, vm))
+            chosen_slot: Optional[SlotId] = None
+            chosen_vm: Optional[VM] = None
+            for vm in sorted(vms, key=lambda v: (dist(v), v.id)):
+                if vm_cpu[vm.id] + 1e-9 < c_bar:
+                    continue
+                # best-fit slot within the VM by remaining memory
+                fitting = [s for s in vm.slot_ids()
+                           if mapping.slot_mem[s] + 1e-9 >= m_bar]
+                if not fitting:
+                    continue
+                chosen_slot = min(fitting, key=lambda s: (mapping.slot_mem[s], s.slot))
+                chosen_vm = vm
+                break
+            if chosen_slot is None:
+                raise InsufficientResourcesError(name)
+            thread = Thread(name, next_idx[name])
+            next_idx[name] += 1
+            mapping.assign(thread, chosen_slot, cpu=0.0, mem=m_bar)
+            vm_cpu[chosen_vm.id] -= c_bar
+            vm_mem[chosen_vm.id] -= m_bar
+            remaining[name] -= 1
+            ref = chosen_vm
+            progressed = True
+        if not progressed:  # pragma: no cover - defensive
+            raise InsufficientResourcesError("<any>", "no progress in RSM sweep")
+    return mapping
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 6: Slot-Aware Mapping (gang scheduling of thread bundles).
+# ---------------------------------------------------------------------------
+
+def _sam_bundle_plan(ta: TaskAllocation, models: ModelLibrary) -> Tuple[int, int, float, float]:
+    """(bundle_size, full_bundles, partial_cpu, partial_mem) for a task.
+
+    MBA allocations carry this directly; for other allocators (not used by
+    the paper with SAM, but supported) it is derived from the model.
+    """
+    model = models[ta.kind]
+    if ta.bundle_size > 0:  # MBA bookkeeping
+        partial_cpu = ta.cpu - ta.full_bundles * 1.0
+        partial_mem = ta.mem - ta.full_bundles * 1.0
+        return ta.bundle_size, ta.full_bundles, max(0.0, partial_cpu), max(0.0, partial_mem)
+    tau_hat = model.tau_hat
+    full = ta.threads // tau_hat
+    rem = ta.threads - full * tau_hat
+    return tau_hat, full, (model.C(rem) if rem else 0.0), (model.M(rem) if rem else 0.0)
+
+
+def map_sam(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
+            models: ModelLibrary) -> Mapping:
+    """Slot-Aware Mapping (Alg. 6).
+
+    Full bundles of ``tau_hat`` threads are gang-mapped to *exclusive* empty
+    slots (the bundle saturates the slot by construction, so it is charged
+    100/100); the final partial bundle best-fits into a partially used slot.
+    At most one partial bundle per task ever shares a slot, bounding
+    mixed-task slots.
+    """
+    mapping = Mapping(vms)
+    next_idx: Dict[str, int] = {n: 0 for n in alloc.tasks}
+    plans = {n: _sam_bundle_plan(ta, models) for n, ta in alloc.tasks.items()}
+    # Full bundles (slot-saturating, charged 100/100 by MBA) go to exclusive
+    # slots; everything else is the partial bundle with its model-derived
+    # residual charge.  Keying off the allocation's bundle bookkeeping (not
+    # a bare tau_i >= tau_hat test) keeps trailing sub-peak thread groups
+    # out of exclusive slots.
+    remaining_full: Dict[str, int] = {n: plans[n][1] for n in alloc.tasks}
+    partial_threads: Dict[str, int] = {
+        n: alloc.tasks[n].threads - plans[n][1] * plans[n][0]
+        for n in alloc.tasks}
+    partial_need: Dict[str, Tuple[float, float]] = {
+        n: (plans[n][2], plans[n][3]) for n in alloc.tasks}
+    order = [t.name for t in dag.topo_order()]
+    slot_list = mapping.slots()
+    cursor = 0  # GetNextFullSlot scans forward from the last exclusive slot
+
+    def next_full_slot() -> Optional[SlotId]:
+        nonlocal cursor
+        for k in range(len(slot_list)):
+            s = slot_list[(cursor + k) % len(slot_list)]
+            if mapping.slot_cpu[s] >= 1.0 - 1e-9 and not mapping.threads_on_slot(s):
+                cursor = (cursor + k) % len(slot_list)
+                return s
+        return None
+
+    def best_fit_slot(cpu: float, mem: float) -> Optional[SlotId]:
+        fitting = [s for s in slot_list
+                   if mapping.slot_cpu[s] + 1e-9 >= cpu
+                   and mapping.slot_mem[s] + 1e-9 >= mem]
+        if not fitting:
+            return None
+        return min(fitting, key=lambda s: (mapping.slot_cpu[s] + mapping.slot_mem[s],
+                                           s.vm, s.slot))
+
+    while sum(remaining_full.values()) + sum(partial_threads.values()) > 0:
+        progressed = False
+        for name in order:
+            bundle, _, _, _ = plans[name]
+            if remaining_full[name] > 0:
+                s = next_full_slot()
+                if s is None:
+                    raise InsufficientResourcesError(name)
+                for _ in range(bundle):
+                    mapping.assign(Thread(name, next_idx[name]), s)
+                    next_idx[name] += 1
+                # the bundle owns the slot outright
+                mapping.slot_cpu[s] = 0.0
+                mapping.slot_mem[s] = 0.0
+                remaining_full[name] -= 1
+                progressed = True
+            elif partial_threads[name] > 0:
+                cpu, mem = partial_need[name]
+                s = best_fit_slot(cpu, mem)
+                if s is None:
+                    raise InsufficientResourcesError(name)
+                for _ in range(partial_threads[name]):
+                    mapping.assign(Thread(name, next_idx[name]), s)
+                    next_idx[name] += 1
+                mapping.slot_cpu[s] -= cpu
+                mapping.slot_mem[s] -= mem
+                partial_threads[name] = 0
+                progressed = True
+        if not progressed:  # pragma: no cover - defensive
+            raise InsufficientResourcesError("<any>", "no progress in SAM sweep")
+    return mapping
+
+
+MAPPERS = {
+    "dsm": map_dsm,
+    "rsm": map_rsm,
+    "sam": map_sam,
+}

@@ -1,0 +1,172 @@
+"""Model-based prediction of schedule behaviour (paper §8.5).
+
+Given *any* thread→slot mapping (not only SAM's), the performance models
+predict:
+
+* the peak input rate the schedule sustains (Fig. 10),
+* per-slot and per-VM CPU% / memory% at a given running rate (Figs. 11–12).
+
+The per-slot-group capacity rule is the paper's (§8.4.1): a group of ``q``
+threads of task ``t`` on one slot supports ``I_t(q)``; a task's capacity is
+the sum over its groups; e.g. 2+2+2+2+9 Azure-Table threads across 5 slots
+give ``4*I(2) + I(9)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .allocation import Allocation
+from .dag import Dataflow
+from .mapping import Mapping as ThreadMapping, SlotId, VM
+from .perfmodel import ModelLibrary
+from .routing import RoutingPolicy, group_rates
+
+#: CPU oversubscription penalty (§8.4.2): Storm pools CPU% across a VM, so
+#: resource-aware mappers can stack compute-heavy threads past a slot's core;
+#: the slot's single worker thread then throttles routing.  When the
+#: rate-scaled CPU on one slot exceeds 100%, capacity scales by 1/over-use.
+#: The §8.5 *predictor* does NOT model this (the paper's doesn't either —
+#: it is one source of its prediction error); the *simulator* does.
+CPU_OVERSUB_PENALTY = False
+
+
+def slot_groups(mapping: ThreadMapping, alloc: Allocation
+                ) -> Dict[str, Dict[SlotId, int]]:
+    """task -> {slot -> thread count} from a mapping."""
+    per_slot = mapping.slot_task_counts()
+    out: Dict[str, Dict[SlotId, int]] = {name: {} for name in alloc.tasks}
+    for slot, counts in per_slot.items():
+        for task, q in counts.items():
+            out[task][slot] = q
+    return out
+
+
+def effective_capacities(dag: Dataflow, alloc: Allocation,
+                         mapping: ThreadMapping, models: ModelLibrary,
+                         *, cpu_penalty: bool = CPU_OVERSUB_PENALTY,
+                         omega: Optional[float] = None,
+                         policy=None, iters: int = 4
+                         ) -> Dict[str, Dict[SlotId, float]]:
+    """Per-(task, slot) sustainable rate.
+
+    With ``cpu_penalty`` (simulator mode) the §8.4.2 throttle is applied:
+    the rate-scaled CPU draw of all groups sharing a slot is summed and, if
+    it exceeds the slot's core, every group's capacity scales by the
+    over-use factor.  Rate-scaling needs the operating rate; pass ``omega``
+    (and optionally a routing policy) — the fixed point is found by a few
+    damped iterations.  Without the penalty this is just ``I_t(q)``.
+    """
+    from .routing import RoutingPolicy, group_rates
+    groups = slot_groups(mapping, alloc)
+    caps: Dict[str, Dict[SlotId, float]] = {
+        t: {s: models[alloc.tasks[t].kind].I(q) for s, q in g.items()}
+        for t, g in groups.items()}
+    if not cpu_penalty:
+        return caps
+    policy = policy or RoutingPolicy.SHUFFLE
+    rates = dag.get_rates(omega) if omega is not None else None
+    for _ in range(iters):
+        # rate-scaled CPU draw per slot at the current capacity estimate
+        slot_cpu: Dict[SlotId, float] = {}
+        for task, g in groups.items():
+            kind = alloc.tasks[task].kind
+            model = models[kind]
+            if rates is not None:
+                arr = group_rates(task, kind, rates[task], g, models, policy)
+            for slot, q in g.items():
+                peak = model.I(q)
+                if rates is None or peak <= 0:
+                    used = model.C(q)
+                else:
+                    served = min(arr[slot], caps[task][slot])
+                    used = model.C(q) * min(1.0, served / peak)
+                slot_cpu[slot] = slot_cpu.get(slot, 0.0) + used
+        nxt: Dict[str, Dict[SlotId, float]] = {}
+        for task, g in groups.items():
+            kind = alloc.tasks[task].kind
+            model = models[kind]
+            nxt[task] = {}
+            for slot, q in g.items():
+                cap = model.I(q)
+                over = slot_cpu.get(slot, 0.0)
+                if over > 1.0 + 1e-9:
+                    cap /= over
+                nxt[task][slot] = cap
+        caps = nxt
+    return caps
+
+
+def predict_max_rate(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,
+                     models: ModelLibrary,
+                     policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
+                     *, cpu_penalty: bool = CPU_OVERSUB_PENALTY) -> float:
+    """Largest DAG input rate Omega* the schedule sustains under ``policy``.
+
+    Task rates are linear in Omega (``rate_t = beta_t * Omega``), so under
+    slot-aware routing the binding constraint per task is its total capacity;
+    under shuffle routing it is the *worst* group, which receives threads-
+    proportional input regardless of its capacity.
+    """
+    betas = dag.get_rates(1.0)
+    caps = effective_capacities(dag, alloc, mapping, models,
+                                cpu_penalty=cpu_penalty)
+    groups = slot_groups(mapping, alloc)
+    omega_star = float("inf")
+    for task, g in groups.items():
+        beta = betas[task]
+        if beta <= 0 or not g:
+            continue
+        total_threads = sum(g.values())
+        total_cap = sum(caps[task].values())
+        if policy is RoutingPolicy.SLOT_AWARE:
+            omega_star = min(omega_star, total_cap / beta)
+        else:
+            for slot, q in g.items():
+                share = q / total_threads
+                if share > 0:
+                    omega_star = min(omega_star, caps[task][slot] / (share * beta))
+    return omega_star
+
+
+@dataclasses.dataclass
+class ResourcePrediction:
+    """Predicted CPU%/mem% per slot and per VM at a given DAG rate."""
+
+    omega: float
+    slot_cpu: Dict[SlotId, float]
+    slot_mem: Dict[SlotId, float]
+    vm_cpu: Dict[int, float]
+    vm_mem: Dict[int, float]
+
+
+def predict_resources(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,
+                      models: ModelLibrary, omega: float,
+                      policy: RoutingPolicy = RoutingPolicy.SHUFFLE
+                      ) -> ResourcePrediction:
+    """Predict resource usage at DAG input rate ``omega`` (§8.5.2).
+
+    A group of ``q`` threads receiving ``r <= I(q)`` is charged
+    ``C(q) * r / I(q)`` (the paper's proportional scale-down); at or above
+    peak it is charged the full ``C(q)/M(q)``.
+    """
+    rates = dag.get_rates(omega)
+    groups = slot_groups(mapping, alloc)
+    slot_cpu: Dict[SlotId, float] = {s: 0.0 for s in mapping.slots()}
+    slot_mem: Dict[SlotId, float] = {s: 0.0 for s in mapping.slots()}
+    for task, g in groups.items():
+        kind = alloc.tasks[task].kind
+        model = models[kind]
+        incoming = group_rates(task, kind, rates[task], g, models, policy)
+        for slot, q in g.items():
+            peak = model.I(q)
+            frac = 1.0 if peak <= 0 else min(1.0, incoming[slot] / peak)
+            slot_cpu[slot] += model.C(q) * frac
+            slot_mem[slot] += model.M(q) * frac
+    vm_cpu: Dict[int, float] = {}
+    vm_mem: Dict[int, float] = {}
+    for vm in mapping.vms:
+        vm_cpu[vm.id] = sum(slot_cpu[s] for s in vm.slot_ids())
+        vm_mem[vm.id] = sum(slot_mem[s] for s in vm.slot_ids())
+    return ResourcePrediction(omega, slot_cpu, slot_mem, vm_cpu, vm_mem)

@@ -1,0 +1,165 @@
+"""End-to-end schedule planning: model -> allocate -> acquire -> map.
+
+Implements the paper's full pipeline (Fig. 2) with the §8.4 retry rule: when
+a resource-aware mapper cannot bin-pack the allocation, acquire one more slot
+and retry, reporting both the estimate and the extra slots (the green bars of
+Figs. 7-8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .allocation import ALLOCATORS, Allocation
+from .dag import Dataflow
+from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
+                      Mapping, VM, acquire_vms)
+from .perfmodel import ModelLibrary
+from .predictor import predict_max_rate, predict_resources
+from .routing import RoutingPolicy
+
+#: Azure D-series pricing per slot-hour (paper §7.1: price is proportional to
+#: slots — $0.098/slot/h across D1..D4).
+PRICE_PER_SLOT_HOUR = 0.098
+
+#: Give up after this many +1-slot retries (a mapper that cannot place with
+#: 4x the estimate is a bug, not fragmentation).
+MAX_EXTRA_SLOTS = 512
+
+
+@dataclasses.dataclass
+class Schedule:
+    dag: Dataflow
+    omega: float
+    allocation: Allocation
+    vms: List[VM]
+    mapping: Mapping
+    allocator: str
+    mapper: str
+    estimated_slots: int     # rho from the allocation
+    acquired_slots: int      # slots actually acquired (>= rho on retries)
+
+    @property
+    def extra_slots(self) -> int:
+        return self.acquired_slots - self.estimated_slots
+
+    @property
+    def price_per_hour(self) -> float:
+        return self.acquired_slots * PRICE_PER_SLOT_HOUR
+
+    def predicted_rate(self, models: ModelLibrary,
+                       policy: RoutingPolicy = RoutingPolicy.SHUFFLE) -> float:
+        return predict_max_rate(self.dag, self.allocation, self.mapping,
+                                models, policy)
+
+    def predicted_resources(self, models: ModelLibrary, omega: Optional[float] = None,
+                            policy: RoutingPolicy = RoutingPolicy.SHUFFLE):
+        return predict_resources(self.dag, self.allocation, self.mapping,
+                                 models, omega if omega is not None else self.omega,
+                                 policy)
+
+    def describe(self) -> str:
+        lines = [f"Schedule[{self.allocator}+{self.mapper}] dag={self.dag.name} "
+                 f"omega={self.omega:g} slots={self.acquired_slots} "
+                 f"(est {self.estimated_slots}, +{self.extra_slots}) "
+                 f"threads={self.allocation.total_threads}"]
+        for slot, counts in sorted(self.mapping.slot_task_counts().items(),
+                                   key=lambda kv: (kv[0].vm, kv[0].slot)):
+            desc = ", ".join(f"{t}x{q}" for t, q in sorted(counts.items()))
+            lines.append(f"  {slot}: {desc}")
+        return "\n".join(lines)
+
+
+def plan(dag: Dataflow, omega: float, models: ModelLibrary,
+         *, allocator: str = "mba", mapper: str = "sam",
+         vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+         fixed_vms: Optional[Sequence[VM]] = None) -> Schedule:
+    """Plan a schedule for ``dag`` at input rate ``omega``.
+
+    ``fixed_vms`` pins the cluster (the §8.5 five-D3-VM experiments);
+    otherwise VMs are acquired per §7.1 for the allocation's slot estimate,
+    growing one slot at a time if the mapper reports fragmentation.
+    """
+    alloc = ALLOCATORS[allocator](dag, omega, models)
+    rho = alloc.slots
+    map_fn = MAPPERS[mapper]
+
+    if fixed_vms is not None:
+        vms = list(fixed_vms)
+        mapping = map_fn(dag, alloc, vms, models)
+        total = sum(vm.num_slots for vm in vms)
+        return Schedule(dag, omega, alloc, vms, mapping, allocator, mapper,
+                        estimated_slots=rho, acquired_slots=total)
+
+    last_err: Optional[Exception] = None
+    for extra in range(MAX_EXTRA_SLOTS + 1):
+        vms = acquire_vms(rho + extra, vm_sizes)
+        try:
+            mapping = map_fn(dag, alloc, vms, models)
+        except InsufficientResourcesError as err:
+            last_err = err
+            continue
+        return Schedule(dag, omega, alloc, vms, mapping, allocator, mapper,
+                        estimated_slots=rho,
+                        acquired_slots=sum(vm.num_slots for vm in vms))
+    raise RuntimeError(
+        f"mapping failed even with {MAX_EXTRA_SLOTS} extra slots") from last_err
+
+
+def replan_on_failure(schedule: Schedule, models: ModelLibrary,
+                      failed_vm_ids: Sequence[int]) -> Schedule:
+    """Fault-tolerance / straggler mitigation: rebuild the mapping without
+    the failed (or persistently slow) VMs.
+
+    The paper's §2 argument made executable: because allocation is
+    model-driven, recovery is ONE deterministic replan — keep the
+    allocation (thread counts derive from the models, not the cluster),
+    drop the failed VMs, acquire replacements per §7.1, and re-map.  No
+    incremental trial-and-error convergence.
+    """
+    failed = set(failed_vm_ids)
+    survivors = [vm for vm in schedule.vms if vm.id not in failed]
+    lost_slots = sum(vm.num_slots for vm in schedule.vms if vm.id in failed)
+    # acquire replacement capacity (fresh ids beyond the existing ones)
+    replacements = acquire_vms(max(lost_slots, 1)) if lost_slots else []
+    next_id = max((vm.id for vm in schedule.vms), default=-1) + 1
+    replacements = [VM(next_id + i, vm.num_slots, vm.rack)
+                    for i, vm in enumerate(replacements)]
+    vms = survivors + replacements
+    map_fn = MAPPERS[schedule.mapper]
+    last_err: Optional[Exception] = None
+    for extra in range(MAX_EXTRA_SLOTS + 1):
+        try:
+            mapping = map_fn(schedule.dag, schedule.allocation, vms, models)
+            return Schedule(schedule.dag, schedule.omega, schedule.allocation,
+                            vms, mapping, schedule.allocator, schedule.mapper,
+                            estimated_slots=schedule.estimated_slots,
+                            acquired_slots=sum(vm.num_slots for vm in vms))
+        except InsufficientResourcesError as err:
+            last_err = err
+            vms = vms + [VM(next_id + len(replacements) + extra, 1)]
+    raise RuntimeError("replan failed") from last_err
+
+
+def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
+                     mapper: str, budget_slots: int,
+                     vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+                     step: float = 10.0, max_rate: float = 1e5) -> float:
+    """Highest rate whose plan fits ``budget_slots`` (the §8.5 protocol:
+    'adding incremental input rates of 10 t/s until the resources required is
+    just within or equal to' the fixed cluster)."""
+    omega, best = step, 0.0
+    while omega <= max_rate:
+        alloc = ALLOCATORS[allocator](dag, omega, models)
+        if alloc.slots > budget_slots:
+            break
+        # also require the mapper to succeed on the fixed budget
+        vms = acquire_vms(budget_slots, vm_sizes)
+        try:
+            MAPPERS[mapper](dag, alloc, vms, models)
+        except InsufficientResourcesError:
+            break
+        best = omega
+        omega += step
+    return best

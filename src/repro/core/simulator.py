@@ -1,0 +1,259 @@
+"""Discrete-time (fluid) simulation of a scheduled dataflow.
+
+Stands in for the paper's live Apache Storm runs: tuple streams flow through
+the mapped DAG, each (task, slot) group services at the model capacity
+``I_t(q)`` (degraded by the §8.4.2 CPU-oversubscription penalty), routing
+follows shuffle or slot-aware policy, queues accumulate when a group is
+overloaded, and the stability test is the paper's latency-slope criterion.
+
+The simulator is what the benchmark harness calls the *actual* behaviour.  It
+deliberately contains effects the schedule planner does NOT model (routing
+skew, oversubscription throttling, network hops), which is what produces the
+planned-vs-actual gaps reported in Figs. 7–13.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from collections import defaultdict
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .allocation import Allocation
+from .dag import Dataflow
+from .mapping import Mapping as ThreadMapping, SlotId
+from .perfmodel import ModelLibrary, latency_slope
+from .predictor import effective_capacities, slot_groups
+from .routing import RoutingPolicy, group_rates
+
+#: Network hop latencies (s): same slot / same VM / cross VM.
+HOP_SAME_SLOT = 0.0002
+HOP_SAME_VM = 0.001
+HOP_CROSS_VM = 0.005
+
+
+@dataclasses.dataclass
+class SimResult:
+    omega: float
+    stable: bool
+    latency_slope: float
+    mean_latency: float            # end-to-end seconds (stable portion)
+    p99_latency: float
+    latency_samples: List[float]
+    queue_total: float             # final total queued tuples
+    slot_busy: Dict[SlotId, float]  # time-averaged utilization per slot
+
+
+class DataflowSimulator:
+    """Fluid-flow simulation with per-group queues at dt resolution."""
+
+    def __init__(self, dag: Dataflow, alloc: Allocation,
+                 mapping: ThreadMapping, models: ModelLibrary,
+                 *, policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
+                 cpu_penalty: bool = True, seed: int = 0):
+        self.dag = dag
+        self.alloc = alloc
+        self.mapping = mapping
+        self.models = models
+        self.policy = policy
+        self.cpu_penalty = cpu_penalty
+        self.groups = slot_groups(mapping, alloc)
+        self.rng = random.Random(seed)
+        self._topo = [t for t in dag.topo_order()]
+
+    def _caps_at(self, omega: float):
+        """Rate-dependent effective capacities (§8.4.2 throttle)."""
+        return effective_capacities(self.dag, self.alloc, self.mapping,
+                                    self.models, cpu_penalty=self.cpu_penalty,
+                                    omega=omega, policy=self.policy)
+
+    # -- helpers -------------------------------------------------------------
+    def _routing_fractions(self, omega: float) -> Dict[str, Dict[SlotId, float]]:
+        rates = self.dag.get_rates(omega)
+        out: Dict[str, Dict[SlotId, float]] = {}
+        for task, g in self.groups.items():
+            kind = self.alloc.tasks[task].kind
+            r = rates[task]
+            if r <= 0 or not g:
+                out[task] = {s: 0.0 for s in g}
+                continue
+            dist = group_rates(task, kind, r, g, self.models, self.policy)
+            out[task] = {s: dist[s] / r for s in g}
+        return out
+
+    def _hop_latency(self, src_task: str, dst_task: str) -> float:
+        """Expected network hop latency between two tasks' thread groups."""
+        src_slots = list(self.groups.get(src_task, {}))
+        dst_slots = list(self.groups.get(dst_task, {}))
+        if not src_slots or not dst_slots:
+            return 0.0
+        total, n = 0.0, 0
+        for a in src_slots:
+            for b in dst_slots:
+                if a == b:
+                    total += HOP_SAME_SLOT
+                elif a.vm == b.vm:
+                    total += HOP_SAME_VM
+                else:
+                    total += HOP_CROSS_VM
+                n += 1
+        return total / n
+
+    # -- main entry ------------------------------------------------------------
+    def run(self, omega: float, *, duration: float = 60.0, dt: float = 0.05,
+            warmup: float = 5.0, latency_sample_every: float = 0.25) -> SimResult:
+        frac = self._routing_fractions(omega)
+        rates = self.dag.get_rates(omega)
+        self.caps = self._caps_at(omega)
+        queues: Dict[Tuple[str, SlotId], float] = {
+            (t, s): 0.0 for t, g in self.groups.items() for s in g}
+        busy_acc: Dict[SlotId, float] = defaultdict(float)
+        latency_t: List[float] = []
+        latency_v: List[float] = []
+
+        # Pre-compute per-group arrival and service rates (fluid model:
+        # arrivals at a group are the task rate times its routing fraction;
+        # upstream being overloaded throttles downstream arrivals).
+        steps = int(duration / dt)
+        for step in range(steps):
+            now = step * dt
+            # per-task realized output rate this tick (source first)
+            realized: Dict[str, float] = {}
+            for t in self._topo:
+                name = t.name
+                in_rate = rates[name]
+                # throttle by upstream realization
+                ins = self.dag.in_edges(name)
+                if ins:
+                    up = 0.0
+                    for e in ins:
+                        sel = e.selectivity
+                        src_out = realized.get(e.src, 0.0) * sel
+                        outs = len(self.dag.out_edges(e.src))
+                        from .dag import Routing
+                        if self.dag.routing[e.src] is Routing.SPLIT and outs:
+                            src_out /= outs
+                        up += src_out
+                    in_rate = up
+                g = self.groups.get(name, {})
+                if not g:
+                    realized[name] = in_rate
+                    continue
+                out_rate = 0.0
+                for s, q in g.items():
+                    key = (name, s)
+                    arr = in_rate * frac[name].get(s, 0.0)
+                    cap = self.caps[name][s]
+                    q_len = queues[key] + arr * dt
+                    served = min(q_len, cap * dt)
+                    queues[key] = q_len - served
+                    out_rate += served / dt
+                    busy_acc[s] += (served / dt) / cap * dt if cap > 0 else 0.0
+                realized[name] = out_rate
+            # latency sample along the critical path (queue delay + service
+            # + network hops), the paper's per-tuple end-to-end measure.
+            if now >= 0 and (step % max(1, int(latency_sample_every / dt)) == 0):
+                lat = self._path_latency(queues, frac, rates)
+                latency_t.append(now)
+                latency_v.append(lat)
+
+        # stability: slope of latencies past warm-up (§5.1 criterion)
+
+        k0 = next((i for i, t0 in enumerate(latency_t) if t0 >= warmup), 0)
+        tail = latency_v[k0:] if len(latency_v) > k0 + 2 else latency_v
+        slope = latency_slope(tail)
+        stable = slope <= 1e-3
+        mean_lat = sum(tail) / len(tail) if tail else 0.0
+        p99 = sorted(tail)[int(0.99 * (len(tail) - 1))] if tail else 0.0
+        return SimResult(
+            omega=omega, stable=stable, latency_slope=slope,
+            mean_latency=mean_lat, p99_latency=p99, latency_samples=tail,
+            queue_total=sum(queues.values()),
+            slot_busy={s: busy_acc[s] / duration for s in busy_acc},
+        )
+
+    def _path_latency(self, queues, frac, rates) -> float:
+        """Expected end-to-end latency: per task, the routing-weighted queue
+        wait + service time, plus hop latency along DAG edges."""
+        per_task: Dict[str, float] = {}
+        for name, g in self.groups.items():
+            if not g:
+                per_task[name] = 0.0
+                continue
+            acc = 0.0
+            for s, q in g.items():
+                f = frac[name].get(s, 0.0)
+                cap = self.caps[name][s]
+                if cap <= 0:
+                    continue
+                wait = queues[(name, s)] / cap
+                acc += f * (wait + 1.0 / cap)
+            per_task[name] = acc
+        # longest path by expected latency (source -> sink)
+        best: Dict[str, float] = {}
+        for t in self._topo:
+            name = t.name
+            ins = self.dag.in_edges(name)
+            if not ins:
+                best[name] = per_task.get(name, 0.0)
+            else:
+                best[name] = per_task.get(name, 0.0) + max(
+                    best[e.src] + self._hop_latency(e.src, name) for e in ins)
+        sinks = [t.name for t in self.dag.sinks()]
+        return max(best[s] for s in sinks) if sinks else 0.0
+
+    # -- derived measurements ---------------------------------------------------
+    def max_stable_rate(self, *, lo: float = 1.0, hi: float = 1e5,
+                        tol: float = 0.01, duration: float = 30.0,
+                        dt: float = 0.05) -> float:
+        """Binary-search the highest stable DAG rate (the paper's empirical
+        'actual rate': increase until latency slope turns positive)."""
+        # quick analytic bracket from capacities
+        from .predictor import predict_max_rate
+        analytic = predict_max_rate(self.dag, self.alloc, self.mapping,
+                                    self.models, self.policy)
+        hi = min(hi, analytic * 1.5 + 10)
+        lo_ok, hi_bad = 0.0, hi
+        while hi_bad - lo_ok > tol * max(1.0, lo_ok):
+            mid = 0.5 * (lo_ok + hi_bad)
+            res = self.run(mid, duration=duration, dt=dt)
+            if res.stable:
+                lo_ok = mid
+            else:
+                hi_bad = mid
+        return lo_ok
+
+
+def measured_resources(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,
+                       models: ModelLibrary, omega: float,
+                       policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
+                       *, seed: int = 0, noise: float = 0.06
+                       ) -> Tuple[Dict[int, float], Dict[int, float]]:
+    """Per-VM 'actual' CPU%/mem% at rate omega.
+
+    The actual usage differs from the §8.5 prediction because (a) routing
+    skew sends groups more/less than their share — captured here by the
+    fluid routing fractions — and (b) real resource draw is noisy; a small
+    multiplicative noise term models the measurement scatter of Figs. 11-12.
+    """
+    rng = random.Random(seed)
+    rates = dag.get_rates(omega)
+    groups = slot_groups(mapping, alloc)
+    caps = effective_capacities(dag, alloc, mapping, models)
+    vm_cpu: Dict[int, float] = {vm.id: 0.0 for vm in mapping.vms}
+    vm_mem: Dict[int, float] = {vm.id: 0.0 for vm in mapping.vms}
+    for task, g in groups.items():
+        kind = alloc.tasks[task].kind
+        model = models[kind]
+        incoming = group_rates(task, kind, rates[task], g, models, policy)
+        for slot, q in g.items():
+            cap = caps[task][slot]
+            served = min(incoming[slot], cap)
+            peak = model.I(q)
+            frac_used = 1.0 if peak <= 0 else min(1.0, served / peak)
+            jit_c = 1.0 + rng.uniform(-noise, noise)
+            jit_m = 1.0 + rng.uniform(-noise, noise)
+            vm_cpu[slot.vm] += model.C(q) * frac_used * jit_c
+            vm_mem[slot.vm] += model.M(q) * frac_used * jit_m
+    return vm_cpu, vm_mem

@@ -1,0 +1,11 @@
+"""Distribution: sharding rules, roofline constants, HLO collective parsing."""
+
+from .sharding import (batch_spec, cache_spec, param_spec, specs_to_shardings,
+                       tree_batch_specs, tree_cache_specs, tree_param_specs,
+                       tree_shardings)
+from .roofline import (CHIP_HBM, HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms,
+                       stage_hbm_fraction, stage_tokens_per_sec,
+                       terms_from_compiled)
+from .hloparse import CollectiveStats, parse_collectives
+from .compression import ErrorFeedbackCompressor
+from .pipeline import gpipe, split_stages

@@ -1,0 +1,108 @@
+"""Parse collective ops + bytes out of compiled (post-SPMD) HLO text.
+
+``compiled.as_text()`` on the CPU/TPU backend is per-device HLO; shapes on
+collective ops are per-device operand shapes.  Bytes-on-wire use the
+standard ring-algorithm factors with the replica-group size parsed from the
+op line:
+
+    all-gather:        (g-1)/g * out_bytes
+    reduce-scatter:    (g-1)/g * in_bytes
+    all-reduce:        2*(g-1)/g * bytes
+    all-to-all:        (g-1)/g * bytes
+    collective-permute: bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    raw_bytes: Dict[str, int]       # per-device result bytes, summed
+    wire_bytes: Dict[str, float]    # ring-factor adjusted
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_raw_bytes(self) -> int:
+        return sum(self.raw_bytes.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.counts[k]} wire={self.wire_bytes[k]/1e6:.1f}MB"
+                 for k in sorted(self.counts)]
+        return "; ".join(parts) if parts else "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = defaultdict(int)
+    raw: Dict[str, int] = defaultdict(int)
+    wire: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # count start ops only for async pairs
+        nbytes = _shape_bytes(shape_str)
+        g = _group_size(line)
+        factor = {
+            "all-gather": (g - 1) / g,
+            "reduce-scatter": (g - 1) / g,
+            "all-reduce": 2 * (g - 1) / g,
+            "all-to-all": (g - 1) / g,
+            "collective-permute": 1.0,
+        }[op]
+        counts[op] += 1
+        raw[op] += nbytes
+        wire[op] += nbytes * factor
+    return CollectiveStats(dict(counts), dict(raw), dict(wire))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(2, len(ids))
+    return 2

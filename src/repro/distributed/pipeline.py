@@ -1,0 +1,102 @@
+"""Pipeline parallelism: GPipe-style microbatch pipelining over a "pipe"
+mesh axis with shard_map + collective_permute.
+
+The layer stack is split into ``n_stages`` contiguous groups; stage s's
+params live only on pipe-rank s (leading stage axis sharded over "pipe").
+Microbatches stream through: at step t, rank s processes microbatch
+(t - s) and passes activations to rank s+1 via collective_permute — the
+classic skew schedule with (n_stages - 1) bubble steps on each side.
+
+This composes with the 2-D FSDP×TP sharding *within* a stage: the pipe
+axis is a third mesh axis (e.g. (pipe, data, model)); here we keep the
+module self-contained and mesh-agnostic so it can also run on a small
+forced-host-device mesh for tests.
+
+Scope note (DESIGN.md §6): the assignment's production meshes are
+(data, model) and (pod, data, model) — the dry-run matrix uses FSDP×TP(×pod),
+and PP is provided as a first-class capability for deeper-than-HBM models
+rather than wired into the assigned cells.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Params = Any
+
+
+def split_stages(stacked_params: Params, n_stages: int) -> Params:
+    """Reshape (L, ...) stacked layer params to (n_stages, L/n_stages, ...)."""
+    def one(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, f"layers {L} not divisible by {n_stages}"
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+    return jax.tree.map(one, stacked_params)
+
+
+def gpipe(layer_fn: Callable[[Params, jax.Array], jax.Array],
+          mesh: Mesh, *, pipe_axis: str, n_microbatches: int):
+    """Build a pipelined apply: ``f(stage_params, x) -> y``.
+
+    ``layer_fn(stage_params, x)`` applies ONE stage's layer group to a
+    microbatch.  ``stage_params`` leaves have leading (n_stages, ...) and
+    are sharded over ``pipe_axis``; ``x`` is (n_microbatches, mb, ...) and
+    comes in replicated across the pipe axis (each rank picks what it
+    needs by schedule position).
+
+    Returns y with the same layout as x.
+    """
+    n_stages = mesh.shape[pipe_axis]
+
+    def pipelined(stage_params, x):
+        # inside shard_map: stage_params has leading (1, ...) — this rank's
+        # stage; x: (n_microbatches, mb, ...)
+        my_params = jax.tree.map(lambda p: p[0], stage_params)
+        rank = jax.lax.axis_index(pipe_axis)
+        n_steps = n_microbatches + n_stages - 1
+        mb_shape = x.shape[1:]
+        fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def step(carry, t):
+            outputs, inflight = carry
+            # rank 0 injects microbatch t; others take the permuted input
+            mb_idx = jnp.clip(t, 0, n_microbatches - 1)
+            injected = jax.lax.dynamic_index_in_dim(x, mb_idx, 0,
+                                                    keepdims=False)
+            cur = jnp.where(rank == 0, injected, inflight)
+            # process if this rank has live work: 0 <= t - rank < n_mb
+            live = (t >= rank) & (t - rank < n_microbatches)
+            out = jax.lax.cond(live, lambda c: layer_fn(my_params, c),
+                               lambda c: c, cur)
+            # last stage stores its finished microbatch
+            out_idx = jnp.clip(t - rank, 0, n_microbatches - 1)
+            store = live & (rank == n_stages - 1)
+            outputs = jax.lax.cond(
+                store,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, out, out_idx, 0),
+                lambda o: o, outputs)
+            # pass activations downstream
+            nxt = jax.lax.ppermute(out, pipe_axis, fwd_perm)
+            return (outputs, nxt), None
+
+        outputs0 = jnp.zeros((n_microbatches, *mb_shape), x.dtype)
+        inflight0 = jnp.zeros(mb_shape, x.dtype)
+        (outputs, _), _ = jax.lax.scan(
+            step, (outputs0, inflight0),
+            jnp.arange(n_steps, dtype=jnp.int32))
+        # only the last stage holds real outputs (zeros elsewhere): a psum
+        # over the pipe axis replicates them on every rank
+        return jax.lax.psum(outputs, pipe_axis)
+
+    mapped = jax.shard_map(
+        pipelined, mesh=mesh,
+        in_specs=(P(pipe_axis), P()),
+        out_specs=P(),
+        check_vma=False)
+    return mapped

@@ -1,0 +1,139 @@
+"""Hardware constants + analytic roofline estimators (TPU v5e-class chip).
+
+Two uses:
+1. §Roofline reporting — turning compiled dry-run cost/memory/collective
+   numbers into the three roofline terms.
+2. Analytic PerfModels for the serving planner: tokens/s of a model stage as
+   a function of chips assigned — the LM-stage analogue of the paper's
+   thread->rate profiles (non-linear for the same root cause: contention,
+   here on ICI and sub-efficient tiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from ..configs.base import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+CHIP_HBM = 16e9              # bytes HBM per chip
+
+#: MXU efficiency floor: matmuls with per-chip dims below 128 lose a factor
+#: (the "flat-then-drop" of small per-chip work).
+MXU_TILE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap estimate of step time (sum would be pessimistic;
+        max assumes perfect overlap — report max as the bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def terms_from_compiled(flops_per_device: float, bytes_per_device: float,
+                        collective_bytes_per_device: float,
+                        *, links: int = 1) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=collective_bytes_per_device / (ICI_BW * links),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic stage estimators (planner-facing).
+# ---------------------------------------------------------------------------
+
+def _flops_per_token(cfg: ModelConfig, seq_in_context: int) -> float:
+    """Forward FLOPs per token: 2*N_active + attention O(S) term."""
+    n = cfg.active_param_count()
+    fl = 2.0 * n
+    if cfg.num_heads:
+        # score+value matmuls over the live context; hybrids only attend in
+        # their shared blocks (every attn_period layers)
+        L = cfg.num_layers
+        if cfg.family == "hybrid" and cfg.attn_period:
+            L = cfg.num_layers // cfg.attn_period
+        if cfg.family == "audio":
+            L = cfg.num_layers  # decoder self-attn; cross-attn term below
+            fl += 4.0 * cfg.num_layers * cfg.num_heads * cfg.head_dim \
+                * cfg.encoder_seq
+        fl += 4.0 * L * cfg.num_heads * cfg.head_dim * seq_in_context
+    return fl
+
+def flops_per_token(cfg: ModelConfig, seq_in_context: int) -> float:
+    return _flops_per_token(cfg, seq_in_context)
+
+
+def _param_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def _kv_bytes_per_token(cfg: ModelConfig, context: int,
+                        dtype_bytes: int = 2) -> float:
+    if not cfg.num_heads:
+        # SSM state is O(1); conv + state per decode step
+        d_in = cfg.ssm_expand * cfg.d_model
+        nheads = max(1, d_in // cfg.ssm_head_dim)
+        return cfg.num_layers * nheads * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+    return (cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim
+            * context * dtype_bytes)
+
+
+def stage_tokens_per_sec(cfg: ModelConfig, *, chips: int, batch: int,
+                         context: int, stage: str,
+                         efficiency: float = 0.55) -> float:
+    """Analytic sustained tokens/s for ``stage`` ("prefill" | "decode")
+    on ``chips`` chips — a roofline max of compute / HBM / ICI terms.
+
+    Non-linearity in ``chips``: collective time per token grows with the
+    TP width (all-reduce bytes ~ 2*D per token per layer boundary regardless
+    of chips, but link count per chip is fixed while compute shrinks), and
+    small per-chip matmul tiles fall off the MXU efficiency cliff.
+    """
+    assert stage in ("prefill", "decode")
+    tokens_in_flight = batch * (context if stage == "prefill" else 1)
+    fl = _flops_per_token(cfg, context) * tokens_in_flight
+    compute_s = fl / (chips * PEAK_FLOPS * efficiency)
+    # MXU tile penalty: per-chip share of d_model below 128 wastes lanes
+    per_chip_d = cfg.d_model / max(1, chips // 8)
+    if per_chip_d < MXU_TILE:
+        compute_s *= MXU_TILE / max(per_chip_d, 8)
+    # memory: decode re-reads all params + KV every step
+    if stage == "decode":
+        bytes_step = _param_bytes(cfg) + batch * _kv_bytes_per_token(cfg, context)
+        memory_s = bytes_step / (chips * HBM_BW)
+    else:
+        bytes_step = _param_bytes(cfg) + 0.15 * fl / PEAK_FLOPS * HBM_BW
+        memory_s = bytes_step / (chips * HBM_BW)
+    # collectives: 2 all-reduces of (tokens, D) per layer across the TP group
+    tp = min(chips, 16)
+    coll_bytes = (2 * cfg.num_layers * tokens_in_flight * cfg.d_model * 2
+                  * 2 * (tp - 1) / tp)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    step_s = max(compute_s, memory_s, collective_s)
+    return tokens_in_flight / step_s
+
+
+def stage_hbm_fraction(cfg: ModelConfig, *, chips: int, batch: int,
+                       context: int) -> float:
+    """Fraction of the pool's HBM used by params + KV (the 'memory%' of the
+    paper's models)."""
+    need = _param_bytes(cfg) + batch * _kv_bytes_per_token(cfg, context)
+    return need / (chips * CHIP_HBM)

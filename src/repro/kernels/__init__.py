@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for substrate hot spots (paper has no kernel-level
+contribution; these serve the assigned architecture pool):
+
+* flash_attention: tiled online-softmax causal GQA attention
+* ssd_scan: chunked Mamba2 SSD scan with VMEM-resident recurrent state
+
+Each package has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+model-layout wrapper + custom_vjp) and ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; pallas_call targets TPU.
+"""

@@ -1,0 +1,79 @@
+"""Jit-ready flash attention op in model layout.
+
+``flash_attention(q, k, v)`` with q: (B, Sq, H, hd), k/v: (B, Skv, K, hd)
+(the layout attention_block produces):
+
+* transposes to the kernel's (B, heads, S, hd) layout,
+* pads head_dim to the TPU lane width (128) — e.g. kimi's hd=112,
+* runs the Pallas forward (interpret=True executes the same kernel body in
+  python on CPU for tests),
+* custom_vjp: the backward recomputes with the pure-jnp reference and
+  differentiates through it (flash-style recompute; the fwd kernel stays the
+  production hot path, bwd trades one extra fwd's FLOPs for O(S^2) memory).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_fwd
+from .ref import reference_attention
+
+LANE = 128
+
+
+def _pad_hd(x: jax.Array) -> jax.Array:
+    hd = x.shape[-1]
+    pad = (-hd) % LANE
+    if pad:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    return x
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_offset: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """Model-layout flash attention with reference-recompute backward."""
+    B, Sq, H, hd = q.shape
+    sm_scale = hd ** -0.5
+    if q_offset is None:
+        q_offset = jnp.zeros((B,), jnp.int32)
+
+    # q_offset is closed over (it is integer-typed; keeping it out of the
+    # custom_vjp signature avoids float0 cotangent plumbing)
+    @jax.custom_vjp
+    def _attn(q, k, v):
+        qt = _pad_hd(jnp.swapaxes(q, 1, 2))       # (B, H, Sq, hd')
+        kt = _pad_hd(jnp.swapaxes(k, 1, 2))
+        vt = _pad_hd(jnp.swapaxes(v, 1, 2))
+        out = flash_attention_fwd(qt, kt, vt, q_offset=q_offset,
+                                  causal=causal, sm_scale=sm_scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+        return jnp.swapaxes(out[..., :hd], 1, 2)  # back to (B, Sq, H, hd)
+
+    def _ref(q, k, v):
+        out = reference_attention(jnp.swapaxes(q, 1, 2),
+                                  jnp.swapaxes(k, 1, 2),
+                                  jnp.swapaxes(v, 1, 2),
+                                  causal=causal, q_offset=q_offset,
+                                  sm_scale=sm_scale)
+        return jnp.swapaxes(out, 1, 2)
+
+    def _fwd(q, k, v):
+        return _attn(q, k, v), (q, k, v)
+
+    def _bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(_ref, q, k, v)
+        return vjp(g)
+
+    _attn.defvjp(_fwd, _bwd)
+    return _attn(q, k, v)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (fp32 softmax, GQA)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        q_offset: Optional[jax.Array] = None,
+                        sm_scale: Optional[float] = None) -> jax.Array:
+    """q: (B, H, Sq, hd)  k/v: (B, K, Skv, hd), H = G*K -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    sm_scale = sm_scale if sm_scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, K, G, Sq, hd) * sm_scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+    if causal:
+        q_pos = jnp.arange(Sq)[None, :]
+        if q_offset is not None:
+            q_pos = q_pos + q_offset[:, None]
+        k_pos = jnp.arange(Skv)[None, :]
+        mask = q_pos[:, :, None] >= k_pos[:, None, :]        # (B, Sq, Skv)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

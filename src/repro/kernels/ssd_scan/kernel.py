@@ -1,0 +1,125 @@
+"""Pallas TPU kernel for the chunked SSD (Mamba2) scan.
+
+Grid (B, H, num_chunks) with the chunk axis innermost: TPU grid iteration is
+sequential, so the (P, N) fp32 recurrent state lives in VMEM scratch and
+carries across chunks of one (b, h) cell — the inter-chunk recurrence costs
+no HBM round-trips, which is the whole point of adapting SSD to the TPU
+memory hierarchy (the GPU version leans on shared memory + warp shuffles;
+here the VMEM-resident state plus MXU-shaped (Q,Q)/(Q,N) matmuls are the
+equivalent).
+
+Per-chunk working set: x (Q,P) + B,C (Q,N) + decay (Q,Q) fp32 + state (P,N)
+~ 0.6 MB at Q=256, P=64, N=128 — far under VMEM; Q is the tiling knob.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+                y_ref, fs_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0].astype(jnp.float32)                # scalar
+    Bm = b_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)            # (Q, N)
+
+    dA = dt * A                                     # (Q,)
+    cum = jnp.cumsum(dA)                            # (Q,)
+    state = state_ref[...]                          # (P, N)
+
+    # inter-chunk: y_i += exp(cum_i) * C_i . state
+    y_inter = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[:, None]       # (Q, P)
+
+    # intra-chunk: masked decay attention
+    diff = cum[:, None] - cum[None, :]              # (Q, Q)
+    q_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    k_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal_mask = q_i >= k_j
+    L = jnp.where(causal_mask, jnp.exp(jnp.where(causal_mask, diff, 0.0)), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    att = scores * L * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32) + y_inter
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: state' = exp(cum_last)*state + x^T @ (w * B)
+    w = jnp.exp(cum[-1] - cum) * dt                 # (Q,)
+    wB = Bm * w[:, None]                            # (Q, N)
+    state_ref[...] = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        x, wB, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        fs_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_fwd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, *, chunk: int,
+                 init_state: Optional[jax.Array] = None,
+                 interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Kernel layout: x (Bt,S,H,P), dt (Bt,S,H), A (H,), B/C (Bt,S,N).
+
+    Returns (y (Bt,S,H,P), final_state (Bt,H,P,N)).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> no-op steps
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    # kernel layouts
+    xk = jnp.transpose(x, (0, 2, 1, 3)).reshape(Bt, H, nc, Q, P)
+    dtk = jnp.transpose(dt, (0, 2, 1)).reshape(Bt, H, nc, Q)
+    Bk = B.reshape(Bt, nc, Q, N)
+    Ck = C.reshape(Bt, nc, Q, N)
+    if init_state is None:
+        init_state = jnp.zeros((Bt, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((Bt, H, nc, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, A, Bk, Ck, init_state)
+    y = y.reshape(Bt, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+    return y, fs

@@ -1,0 +1,45 @@
+"""Jit-ready SSD scan op (model layout) with reference-recompute backward."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_fwd
+from .ref import ssd_reference
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int,
+             init_state: Optional[jax.Array] = None,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (Bt,S,H,P)  dt: (Bt,S,H)  A: (H,)  B/C: (Bt,S,N).
+
+    Pallas forward; backward recomputes through the pure-jnp reference
+    (same trade as the flash op: fwd kernel is the hot path, bwd pays one
+    reference fwd to avoid persisting per-chunk internals).
+    """
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], x.shape[2], x.shape[3],
+                                B.shape[-1]), jnp.float32)
+
+    @jax.custom_vjp
+    def _ssd(x, dt, A, B, C, init_state):
+        return ssd_scan_fwd(x, dt, A, B, C, chunk=chunk,
+                            init_state=init_state, interpret=interpret)
+
+    def _fwd(x, dt, A, B, C, init_state):
+        return _ssd(x, dt, A, B, C, init_state), (x, dt, A, B, C, init_state)
+
+    def _bwd(res, g):
+        x, dt, A, B, C, init_state = res
+        _, vjp = jax.vjp(
+            lambda x, dt, A, B, C, ini: ssd_reference(
+                x, dt, A, B, C, chunk=chunk, init_state=ini),
+            x, dt, A, B, C, init_state)
+        return vjp(g)
+
+    _ssd.defvjp(_fwd, _bwd)
+    return _ssd(x, dt, A, B, C, init_state)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for the chunked SSD (Mamba2) scan.
+
+Semantics (Dao & Gu 2024, state-space duality):
+
+    state_s = exp(dt_s * A) * state_{s-1} + dt_s * B_s (outer) x_s
+    y_s     = C_s . state_s
+
+computed chunk-wise: within a chunk of Q tokens the recurrence unrolls into a
+masked attention-like matmul; across chunks a (H, P, N) state is carried.
+All accumulation in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                  C: jax.Array, *, chunk: int,
+                  init_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """x: (Bt,S,H,P)  dt: (Bt,S,H)  A: (H,) (negative)  B,C: (Bt,S,N).
+
+    Returns (y: (Bt,S,H,P), final_state: (Bt,H,P,N)).
+    """
+    Bt, S, H, Pd = x.shape
+    N = B.shape[-1]
+    out_dtype = x.dtype
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xf = x.astype(jnp.float32).reshape(Bt, nc, Q, H, Pd)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, Q, H)
+    Bf = B.astype(jnp.float32).reshape(Bt, nc, Q, N)
+    Cf = C.astype(jnp.float32).reshape(Bt, nc, Q, N)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af[None, None, None, :]                  # (b,c,q,h) <= 0
+    cum = jnp.cumsum(dA, axis=2)                        # inclusive cumsum
+
+    # ---- intra-chunk (the Pallas-kernel hot spot) -----------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j, else 0       (b,c,h,i,j)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,c,i,j,h)
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))[None, None, :, :, None]
+    # mask BEFORE exp: masked (i<j) positions have diff >> 0 whose exp()
+    # overflows and poisons the backward pass with inf * 0 = nan
+    L = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)         # (b,c,i,j)
+    att = scores[:, :, :, :, None] * L * dtf[:, :, None, :, :]  # dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xf)
+
+    # ---- chunk summaries -------------------------------------------------
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtf             # (b,c,q,h)
+    chunk_state = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, Bf, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (b,c,h)
+
+    # ---- inter-chunk scan -----------------------------------------------
+    state0 = (init_state.astype(jnp.float32) if init_state is not None
+              else jnp.zeros((Bt, H, Pd, N), jnp.float32))
+
+    def step(carry, inp):
+        s_c, decay_c, C_c, cum_c = inp
+        # y_inter_i = exp(cum_i) * (C_i . carry)
+        y_int = jnp.einsum("bin,bhpn->bihp", C_c, carry) \
+            * jnp.exp(cum_c)[:, :, :, None]                 # (b,i,h,1)
+        new = decay_c[:, :, None, None] * carry + s_c
+        return new, y_int
+
+    # move chunk axis to the front for scan
+    scan_in = (
+        jnp.moveaxis(chunk_state, 1, 0),    # (c,b,h,p,n)
+        jnp.moveaxis(chunk_decay, 1, 0),    # (c,b,h)
+        jnp.moveaxis(Cf, 1, 0),             # (c,b,q,n)
+        jnp.moveaxis(cum, 1, 0),            # (c,b,q,h)
+    )
+    final_state, y_inter = jax.lax.scan(step, state0, scan_in)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)   # (b,c,q,h,p)
+
+    y = (y_intra + y_inter).reshape(Bt, Sp, H, Pd)[:, :S]
+    return y.astype(out_dtype), final_state

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, dry-run driver, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import; import it only in a
+fresh process (python -m repro.launch.dryrun).
+"""
+
+from .mesh import env_for_mesh, make_host_mesh, make_production_mesh

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the appropriate step program — train_step / prefill / serve
+decode_step — is jit-compiled against ShapeDtypeStruct inputs with explicit
+in_shardings on the production mesh; we record:
+
+* memory_analysis(): per-device bytes (arguments / output / temporaries)
+* cost_analysis(): per-device HLO FLOPs + bytes accessed
+* the collective schedule parsed from post-SPMD HLO (op counts + wire bytes)
+* the three roofline terms + MODEL_FLOPS/HLO_FLOPS usefulness ratio
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.hloparse import parse_collectives
+from ..distributed.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                    terms_from_compiled)
+from ..distributed.sharding import (specs_to_shardings, tree_batch_specs,
+                                    tree_cache_specs, tree_param_specs)
+from ..models.api import cache_specs, get_model, input_specs
+from ..models.common import Env
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import init_train_state, make_train_step
+from .mesh import env_for_mesh, make_production_mesh
+
+
+_LEAN_OPT = {"enabled": False}
+
+
+def env_lean_optimizer(env) -> bool:
+    return _LEAN_OPT["enabled"]
+
+
+def set_lean_optimizer(on: bool) -> None:
+    _LEAN_OPT["enabled"] = on
+
+
+def _struct_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+               *, microbatches: int = 1, remat: bool = True):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings, donate)."""
+    api = get_model(cfg)
+    mesh = env.mesh
+    batch = input_specs(cfg, shape)
+    batch_sh = specs_to_shardings(env, tree_batch_specs(env, batch))
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(schedule=cfg.lr_schedule,
+                              quantize_nu=env_lean_optimizer(env),
+                              mu_dtype=jnp.bfloat16
+                              if env_lean_optimizer(env) else jnp.float32)
+        state = jax.eval_shape(
+            lambda k: init_train_state(api, k, opt_cfg), jax.random.PRNGKey(0))
+        state_sh = specs_to_shardings(env, tree_param_specs(env, state))
+        fn = make_train_step(api, env, opt_cfg, microbatches=microbatches)
+        return fn, (state, batch), (state_sh, batch_sh), (0,)
+
+    params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    # production serving holds bf16 weights
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), params)
+    # serving keeps weights fully TP-resident (no FSDP re-gather per token)
+    params_sh = specs_to_shardings(
+        env, tree_param_specs(env, params, serving=True))
+
+    if shape.kind == "prefill":
+        fn = lambda p, b: api.prefill(env, p, b)
+        return fn, (params, batch), (params_sh, batch_sh), ()
+
+    cache = cache_specs(cfg, shape, env)
+    cache_sh = specs_to_shardings(env, tree_cache_specs(env, cache))
+    fn = lambda p, c, b: api.decode_step(env, p, c, b)
+    return fn, (params, cache, batch), (params_sh, cache_sh, batch_sh), (1,)
+
+
+def _lower_metrics(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+                   microbatches: int) -> Dict[str, float]:
+    """flops / bytes / collective wire bytes (per device) for one lowering."""
+    fn, args, shardings, donate = build_cell(cfg, shape, env,
+                                             microbatches=microbatches)
+    compiled = jax.jit(fn, in_shardings=shardings,
+                       donate_argnums=donate).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(colls.total_wire_bytes),
+    }
+
+
+def calibrated_metrics(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+                       microbatches: int) -> Dict[str, float]:
+    """Layer-corrected per-device metrics.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE, so the scanned
+    layer stack under-reports FLOPs/bytes/collectives by ~L.  Costs are
+    affine in depth — cost(L) = a + b*L — so two *unrolled* lowerings at
+    small depths give exact a and b to extrapolate from.
+    """
+    if cfg.family == "hybrid":
+        l1, l2 = cfg.attn_period, 2 * cfg.attn_period
+    else:
+        l1, l2 = 1, 2
+    env_u = dataclasses.replace(env, unroll_layers=True)
+
+    def with_depth(l: int) -> ModelConfig:
+        kw = {"num_layers": l}
+        if cfg.family == "audio":
+            kw["encoder_layers"] = l
+        return dataclasses.replace(cfg, **kw)
+
+    m1 = _lower_metrics(with_depth(l1), shape, env_u, microbatches)
+    m2 = _lower_metrics(with_depth(l2), shape, env_u, microbatches)
+    scale = (cfg.num_layers - l1) / (l2 - l1)
+    return {k: m1[k] + (m2[k] - m1[k]) * scale for k in m1}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful model FLOPs: 6*N_active*D for train (spec formula); for
+    inference shapes, per-token fwd FLOPs including the attention-over-
+    context term (otherwise long-context decode reads as ~0% useful)."""
+    from ..distributed.roofline import flops_per_token
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        # mean live context is seq/2 for causal prefill
+        return flops_per_token(cfg, shape.seq_len // 2) \
+            * shape.global_batch * shape.seq_len
+    return flops_per_token(cfg, shape.seq_len) * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             microbatches: int = 1, env_overrides: Optional[Dict] = None,
+             save_hlo: Optional[str] = None,
+             calibrate: bool = True,
+             cfg_overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        cell.update(status="skipped", reason=reason)
+        return cell
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        env = env_for_mesh(mesh, **(env_overrides or {}))
+        fn, args, shardings, donate = build_cell(
+            cfg, shape, env, microbatches=microbatches)
+        jitted = jax.jit(fn, in_shardings=shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+
+        chips = mesh.devices.size
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        coll_dev = float(colls.total_wire_bytes)
+        if calibrate:
+            cal = calibrated_metrics(cfg, shape, env, microbatches)
+            flops_c, bytes_c, coll_c = cal["flops"], cal["bytes"], cal["coll"]
+        else:
+            flops_c, bytes_c, coll_c = flops_dev, bytes_dev, coll_dev
+        terms = terms_from_compiled(flops_c, bytes_c, coll_c)
+        mf = model_flops(cfg, shape)
+        hlo_flops_global = flops_c * chips
+
+        cell.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=dict(
+                args_bytes=mem.argument_size_in_bytes,
+                out_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                total_per_device=(mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+            ),
+            cost=dict(flops_per_device=flops_dev,
+                      bytes_per_device=bytes_dev,
+                      flops_per_device_corrected=flops_c,
+                      bytes_per_device_corrected=bytes_c,
+                      coll_per_device_corrected=coll_c),
+            collectives=dict(counts=colls.counts,
+                             wire_bytes=colls.wire_bytes,
+                             raw_bytes=colls.raw_bytes,
+                             per_device_wire_bytes=coll_dev),
+            roofline=dict(compute_s=terms.compute_s,
+                          memory_s=terms.memory_s,
+                          collective_s=terms.collective_s,
+                          dominant=terms.dominant,
+                          step_s_bound=terms.step_s),
+            model_flops=mf,
+            hlo_flops_global=hlo_flops_global,
+            useful_flops_ratio=(mf / hlo_flops_global
+                                if hlo_flops_global else None),
+        )
+    except Exception as err:  # noqa: BLE001 - report, don't crash the matrix
+        cell.update(status="error", error=f"{type(err).__name__}: {err}",
+                    traceback=traceback.format_exc()[-2000:])
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape id (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the unrolled L=1/L=2 cost calibration")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-shard residual activations over tp")
+    ap.add_argument("--attn-chunk", type=int, default=0,
+                    help="query-chunked attention block size")
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=["nothing", "dots"])
+    ap.add_argument("--lean-optimizer", action="store_true",
+                    help="int8 nu + bf16 mu optimizer state")
+    ap.add_argument("--ssm-chunk", type=int, default=0,
+                    help="override the SSD chunk length (ssm/hybrid archs)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, why = shape_applicable(get_config(a), SHAPES[s])
+                print(f"{a:24s} {s:12s} {'ok' if ok else 'SKIP: ' + why}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for multi in meshes:
+        for a in archs:
+            for s in shapes:
+                overrides = {}
+                if args.seq_shard:
+                    overrides["seq_shard_activations"] = True
+                if args.attn_chunk:
+                    overrides["attn_q_chunk"] = args.attn_chunk
+                if args.remat_policy != "nothing":
+                    overrides["remat_policy"] = args.remat_policy
+                set_lean_optimizer(args.lean_optimizer)
+                cfg_over = ({"ssm_chunk": args.ssm_chunk}
+                            if args.ssm_chunk else None)
+                cell = run_cell(a, s, multi_pod=multi,
+                                microbatches=args.microbatches,
+                                calibrate=not args.no_calibrate,
+                                env_overrides=overrides or None,
+                                cfg_overrides=cfg_over)
+                results.append(cell)
+                name = f"{cell['mesh']}-{a}-{s}.json"
+                with open(os.path.join(args.out, name), "w") as f:
+                    json.dump(cell, f, indent=2)
+                _print_cell(cell)
+    n_ok = sum(1 for c in results if c["status"] == "ok")
+    n_skip = sum(1 for c in results if c["status"] == "skipped")
+    n_err = sum(1 for c in results if c["status"] == "error")
+    print(f"\n== dry-run done: {n_ok} ok, {n_skip} skipped, {n_err} errors ==")
+    if n_err:
+        raise SystemExit(1)
+
+
+def _print_cell(c: Dict[str, Any]) -> None:
+    tag = f"{c['mesh']} {c['arch']} {c['shape']}"
+    if c["status"] == "skipped":
+        print(f"[SKIP] {tag}: {c['reason'][:80]}")
+        return
+    if c["status"] == "error":
+        print(f"[ERR ] {tag}: {c['error'][:160]}")
+        return
+    m = c["memory"]["total_per_device"] / 2**30
+    r = c["roofline"]
+    print(f"[ OK ] {tag}: mem/dev={m:.2f}GiB "
+          f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+          f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+          f"useful={c['useful_flops_ratio'] and round(c['useful_flops_ratio'], 3)} "
+          f"(lower {c['lower_s']}s compile {c['compile_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

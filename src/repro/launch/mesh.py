@@ -1,0 +1,40 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod (16, 16) = 256 chips as (data, model); the
+multi-pod variant adds a leading "pod" axis for 2 x 256 = 512 chips, with
+the pod axis joining data-parallelism (its collectives ride DCN, which is
+why the dry-run proving the "pod" axis shards is the multi-pod gate).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from ..models.common import Env
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
+    """Small mesh over forced host devices (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def env_for_mesh(mesh: Optional[Mesh], **overrides) -> Env:
+    """Env with batch axes = every non-"model" axis, tp = "model"."""
+    if mesh is None:
+        return Env(**overrides)
+    axes = tuple(mesh.axis_names)
+    batch_axes = tuple(a for a in axes if a != "model")
+    tp = "model" if "model" in axes else None
+    return Env(mesh=mesh, batch_axes=batch_axes, tp_axis=tp, **overrides)

@@ -1,0 +1,4 @@
+"""Model zoo: unified decoder (dense/moe/ssm/hybrid/vlm) + enc-dec (audio)."""
+
+from .api import ModelApi, cache_specs, get_model, input_specs
+from .common import Env, default_env

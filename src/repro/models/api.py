@@ -1,0 +1,83 @@
+"""Uniform model API + ShapeDtypeStruct input specs for every arch x shape.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins
+for every model input (the dry-run pattern: no device allocation).  Modality
+frontends are stubs per the assignment: audio provides precomputed frame
+embeddings, vlm precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .common import Env
+from . import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Params]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]
+    prefill: Callable[..., Tuple[jax.Array, Dict]]
+    decode_step: Callable[..., Tuple[jax.Array, Dict]]
+    init_cache: Callable[..., Dict]
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "audio":
+        mod = encdec
+    else:
+        mod = transformer
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: mod.init(cfg, key),
+        forward=lambda env, params, batch: mod.forward(env, cfg, params, batch),
+        prefill=lambda env, params, batch, max_len=None: mod.prefill(
+            env, cfg, params, batch, max_len),
+        decode_step=lambda env, params, cache, batch: mod.decode_step(
+            env, cfg, params, cache, batch),
+        init_cache=lambda batch, max_len, env, dtype=jnp.bfloat16:
+            mod.init_cache(cfg, batch, max_len, env, dtype),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs as ShapeDtypeStructs for the given run shape."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a seq_len-long cache
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32),
+        }
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), dtype)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dtype)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, env: Env,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the decode-shape KV/state cache."""
+    api = get_model(cfg)
+    return jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len, env, dtype))

@@ -1,0 +1,153 @@
+"""Shared model plumbing: environment (mesh/axes/flags), initializers,
+sharding-constraint helpers.
+
+Models are pure functions over nested dicts of arrays.  ``Env`` carries the
+distribution context so the same model code runs on 1 CPU device (smoke
+tests), a 256-chip pod, or the 512-chip multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """Distribution + execution context threaded through model code."""
+
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ()     # e.g. ("pod", "data") — batch / FSDP
+    tp_axis: Optional[str] = None        # tensor/expert-parallel axis
+    use_pallas: bool = False             # Pallas kernels (TPU) vs jnp reference
+    interpret: bool = False              # Pallas interpret mode (CPU tests)
+    remat: bool = True                   # activation checkpoint the layer body
+    seq_shard_activations: bool = False  # Megatron-SP-style residual sharding
+    unroll_layers: bool = False          # python loop instead of lax.scan
+    attn_q_chunk: int = 0                # chunk queries (S^2 memory / chunk)
+    remat_policy: str = "nothing"        # nothing | dots
+    compute_dtype: Any = jnp.bfloat16
+
+    def checkpoint_policy(self):
+        import jax as _jax
+        if self.remat_policy == "dots":
+            return _jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return _jax.checkpoint_policies.nothing_saveable
+
+    @property
+    def dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(jnp.prod(jnp.array(
+            [self.mesh.shape[a] for a in self.batch_axes]))) if self.batch_axes else 1
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    # -- sharding helpers -----------------------------------------------------
+    def shard(self, x: jax.Array, *spec) -> jax.Array:
+        """with_sharding_constraint if a mesh is attached, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def batch_spec_entry(self):
+        """PartitionSpec entry for the global-batch axis."""
+        return self.batch_axes if self.batch_axes else None
+
+    def shard_batch(self, x: jax.Array) -> jax.Array:
+        """Shard leading (batch) axis over the batch axes."""
+        if self.mesh is None or not self.batch_axes:
+            return x
+        spec = [self.batch_axes] + [None] * (x.ndim - 1)
+        return self.shard(x, *spec)
+
+    def shard_activations(self, x: jax.Array) -> jax.Array:
+        """Residual-stream constraint for (B, S, D) activations."""
+        if self.mesh is None:
+            return x
+        if (self.seq_shard_activations and self.tp_axis
+                and x.shape[1] % self.tp == 0):
+            return self.shard(x, self.batch_spec_entry(), self.tp_axis, None)
+        return self.shard(x, self.batch_spec_entry(), None, None)
+
+    def tp_entry_if_divisible(self, dim: int):
+        """tp axis entry only when it divides ``dim`` (e.g. GQA kv heads
+        smaller than the tp width must replicate, not flip-flop shard)."""
+        if self.tp_axis is None or self.mesh is None:
+            return None
+        return self.tp_axis if dim % self.tp == 0 else None
+
+
+def default_env() -> Env:
+    return Env()
+
+
+def scan_layers(env: Env, body, carry, xs):
+    """lax.scan over stacked layer params, or an unrolled python loop when
+    ``env.unroll_layers`` (used by the dry-run's cost calibration: XLA cost
+    analysis counts a while body once, so roofline FLOPs/bytes/collectives
+    are extrapolated from unrolled L=1 / L=2 lowerings)."""
+    if not env.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked_ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked_ys = ys[0] if ys else None
+    return carry, stacked_ys
+
+
+# ---------------------------------------------------------------------------
+# Initializers (all take an explicit key; params are created in fp32 and cast
+# by the train/serve steps as needed).
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape: Sequence[int], in_axis: int = -2,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    scale = fan_in ** -0.5
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape: Sequence[int], dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def stacked(keys, fn, *args, **kwargs):
+    """vmap an initializer over a leading layer axis."""
+    return jax.vmap(lambda k: fn(k, *args, **kwargs))(keys)
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_shapes(tree):
+    return jax.tree.map(lambda x: tuple(x.shape), tree)

@@ -1,0 +1,297 @@
+"""Model building blocks: norms, RoPE, GQA attention, MLPs, embeddings.
+
+All functions are pure; parameter dicts use fixed key names so sharding rules
+(repro.distributed.sharding) can pattern-match on paths.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Env, dense_init, embed_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    # zero-init scale with a (1 + scale) gain
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias) — init / full (train & prefill) / decode
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(kq, (d_model, num_heads * head_dim)),
+        "wk": dense_init(kk, (d_model, num_kv_heads * head_dim)),
+        "wv": dense_init(kv, (d_model, num_kv_heads * head_dim)),
+        "wo": dense_init(ko, (num_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,))
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,))
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,))
+    return p
+
+
+def _mha(env: Env, q: jax.Array, k: jax.Array, v: jax.Array, *,
+         causal: bool, q_offset: Optional[jax.Array] = None,
+         kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention.  q: (B,Sq,H,hd), k/v: (B,Sk,K,hd) with H = G*K.
+
+    ``q_offset``: (B,) absolute position of q[:,0] (causal masking in decode /
+    chunked prefill).  ``kv_len``: (B,) valid KV length (continuous batching).
+    Dispatches to the Pallas flash kernel when env.use_pallas (TPU target) —
+    see repro.kernels.flash_attention.  With ``env.attn_q_chunk`` the query
+    axis is processed in chunks via lax.scan (flash-style: the live S^2
+    score tensor shrinks by the chunk factor; exact, not approximate).
+    """
+    if env.use_pallas and causal and q.shape[1] > 1:
+        from ..kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, q_offset=q_offset,
+                               interpret=env.interpret)
+    cq = env.attn_q_chunk
+    if cq and q.shape[1] > cq and q.shape[1] % cq == 0:
+        B, Sq, H, hd = q.shape
+        nb = Sq // cq
+        base = q_offset if q_offset is not None else jnp.zeros((B,), jnp.int32)
+
+        def block(carry, inp):
+            i, qb = inp
+            out = _mha_dense(env, qb, k, v, causal=causal,
+                             q_offset=base + i * cq, kv_len=kv_len)
+            return carry, out
+
+        # remat each chunk: backward recomputes one chunk's S^2 scores at a
+        # time instead of saving all of them
+        block = jax.checkpoint(block, policy=env.checkpoint_policy())
+        qs = jnp.moveaxis(q.reshape(B, nb, cq, H, hd), 1, 0)   # (nb,B,cq,H,hd)
+        _, outs = jax.lax.scan(block, None,
+                               (jnp.arange(nb, dtype=jnp.int32), qs))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+    return _mha_dense(env, q, k, v, causal=causal, q_offset=q_offset,
+                      kv_len=kv_len)
+
+
+def _mha_dense(env: Env, q: jax.Array, k: jax.Array, v: jax.Array, *,
+               causal: bool, q_offset: Optional[jax.Array] = None,
+               kv_len: Optional[jax.Array] = None) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, K, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)          # (B,K,G,Sq,Sk)
+    Sk = k.shape[1]
+
+    def _constrain(t):
+        """Pin the S^2 attention internals to one consistent layout —
+        query-seq sharded over tp when possible, else key-seq (decode) —
+        so SPMD doesn't flip-flop (involuntary full rematerialization)."""
+        if env.mesh is None or env.tp_axis is None:
+            return t
+        b = env.batch_spec_entry()
+        if Sq % env.tp == 0 and Sq > 1:
+            return env.shard(t, b, None, None, env.tp_axis, None)
+        if Sk % env.tp == 0:
+            return env.shard(t, b, None, None, None, env.tp_axis)
+        return t
+
+    logits = _constrain(logits)
+    q_pos = jnp.arange(Sq)[None, :]                            # (1,Sq)
+    if q_offset is not None:
+        q_pos = q_pos + q_offset[:, None]
+    k_pos = jnp.arange(Sk)[None, :]                            # (1,Sk)
+    mask = jnp.ones((q_pos.shape[0], Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos[:, None, :]
+    if kv_len is not None:
+        mask &= k_pos[:, None, :] < kv_len[:, None, None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = _constrain(jax.nn.softmax(logits, axis=-1))
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vf)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_block(env: Env, p: Params, x: jax.Array, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int, rope_theta: float,
+                    positions: jax.Array, causal: bool = True,
+                    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    kv_len: Optional[jax.Array] = None,
+                    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    use_rope: bool = True,
+                    ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """One attention sublayer (no norm/residual).
+
+    Modes:
+    * train/prefill: kv_cache None -> full self-attention; returns fresh
+      (k, v) so prefill can populate a cache.
+    * decode: kv_cache=(k_cache, v_cache) of shape (B, S_max, K, hd); the
+      single new (k, v) is written at ``positions`` and attention runs over
+      the cache with ``kv_len`` masking.
+    * cross-attention: ``cross_kv`` precomputed from the encoder.
+    """
+    B, Sq, D = x.shape
+    H, K, hd = num_heads, num_kv_heads, head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, Sq, H, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+        out = _mha(env, q, k, v, causal=False, kv_len=kv_len)
+        out = out.reshape(B, Sq, H * hd)
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype)), None
+
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(B, Sq, K, hd)
+    v = v.reshape(B, Sq, K, hd)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if env.tp_axis:
+        q = env.shard(q, env.batch_spec_entry(), None,
+                      env.tp_entry_if_divisible(H), None)
+
+    if kv_cache is None:
+        out = _mha(env, q, k, v, causal=causal,
+                   q_offset=positions[:, 0] if causal else None)
+        new_cache = (k, v)
+    else:
+        k_cache, v_cache = kv_cache
+        b_idx = jnp.arange(B)
+        # write the new token's K/V at its position (per-sequence)
+        pos = positions[:, 0]
+        k_cache = k_cache.at[b_idx, pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[b_idx, pos].set(v[:, 0].astype(v_cache.dtype))
+        lens = kv_len if kv_len is not None else pos + 1
+        out = _mha(env, q, k_cache, v_cache, causal=False, kv_len=lens)
+        new_cache = (k_cache, v_cache)
+    out = out.reshape(B, Sq, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int) -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, (d_model, d_ff)),
+        "wu": dense_init(ku, (d_model, d_ff)),
+        "wd": dense_init(kd, (d_ff, d_model)),
+    }
+
+
+def swiglu(env: Env, p: Params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    if env.tp_axis:
+        f_entry = env.tp_entry_if_divisible(g.shape[-1])
+        g = env.shard(g, env.batch_spec_entry(), None, f_entry)
+        u = env.shard(u, env.batch_spec_entry(), None, f_entry)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff)),
+        "b1": jnp.zeros((d_ff,)),
+        "w2": dense_init(k2, (d_ff, d_model)),
+        "b2": jnp.zeros((d_model,)),
+    }
+
+
+def gelu_mlp(env: Env, p: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)) + p["b1"].astype(x.dtype)
+    if env.tp_axis:
+        h = env.shard(h, env.batch_spec_entry(), None,
+                      env.tp_entry_if_divisible(h.shape[-1]))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype)) + p["b2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int) -> jax.Array:
+    return embed_init(key, (vocab, d_model))
+
+
+def embed(env: Env, table: jax.Array, tokens: jax.Array,
+          dtype=None) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return out.astype(dtype or env.compute_dtype)
+
+
+def lm_head(env: Env, table_or_w: jax.Array, x: jax.Array,
+            *, transpose: bool) -> jax.Array:
+    """Logits; with tied embeddings pass the embedding table and
+    transpose=True."""
+    w = table_or_w.astype(x.dtype)
+    logits = (jnp.einsum("bsd,vd->bsv", x, w) if transpose
+              else jnp.einsum("bsd,dv->bsv", x, w))
+    if env.tp_axis:
+        logits = env.shard(logits, env.batch_spec_entry(), None,
+                           env.tp_entry_if_divisible(logits.shape[-1]))
+    return logits

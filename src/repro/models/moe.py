@@ -1,0 +1,204 @@
+"""Expert-parallel Mixture-of-Experts FFN.
+
+TPU-native formulation: token-choice top-k routing with per-expert capacity,
+sort-based dispatch (no (N, E, C) one-hot einsum — that tensor is quadratic
+in experts and infeasible at 384 experts), expert shards on the ``tp`` mesh
+axis, and two all-to-alls moving only the dispatched tokens:
+
+    local tokens (N, D)
+      -> top-k (N, k) -> sort by expert -> capacity-scatter (E, C, D)
+      -> all_to_all -> (E_local, M*C, D)     [tokens for MY experts, all peers]
+      -> grouped FFN (einsum over E_local)
+      -> all_to_all back -> (E, C, D) -> gather + weighted combine -> (N, D)
+
+Per-device FLOPs are the *active* expert FLOPs (N*k*cf*3*D*F*2), matching
+6*N_active*D accounting; collective bytes are 2 * N*k*cf*D per device per
+direction — exactly what the roofline should see.
+
+Without a mesh (CPU smoke tests) the same code runs with M=1 and no
+collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Env, dense_init
+from .layers import swiglu, init_swiglu
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int,
+             shared_experts: int) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    kg, ku, kd = jax.random.split(ke, 3)
+    p: Params = {
+        "router": dense_init(kr, (d_model, num_experts)),
+        "wg": jax.vmap(lambda k: dense_init(k, (d_model, d_ff)))(
+            jax.random.split(kg, num_experts)),
+        "wu": jax.vmap(lambda k: dense_init(k, (d_model, d_ff)))(
+            jax.random.split(ku, num_experts)),
+        "wd": jax.vmap(lambda k: dense_init(k, (d_ff, d_model)))(
+            jax.random.split(kd, num_experts)),
+    }
+    if shared_experts:
+        p["shared"] = init_swiglu(ks, d_model, shared_experts * d_ff)
+    return p
+
+
+def _dispatch_local(x_flat: jax.Array, ids: jax.Array, capacity: int,
+                    num_experts: int, k: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort assignments by expert and scatter into an (E, C, D) buffer.
+
+    ``ids`` is token-major (assignment a belongs to token a // k), so the
+    buffer gathers straight from ``x_flat`` — no (N*k, D) replication.
+    Returns (buffer, slot_of_assignment, valid) where ``slot_of_assignment``
+    maps each assignment (in original order) to its flat E*C slot (or the
+    overflow slot when dropped).
+    """
+    nk = ids.shape[0]
+    d = x_flat.shape[-1]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    counts = jnp.bincount(ids, length=num_experts)
+    offsets = jnp.cumsum(counts) - counts
+    pos = jnp.arange(nk) - offsets[sorted_ids]
+    valid_sorted = pos < capacity
+    flat_slot_sorted = jnp.where(valid_sorted,
+                                 sorted_ids * capacity + pos,
+                                 num_experts * capacity)
+    buffer = jnp.zeros((num_experts * capacity + 1, d), dtype=x_flat.dtype)
+    buffer = buffer.at[flat_slot_sorted].set(x_flat[order // k], mode="drop")
+    buffer = buffer[:-1].reshape(num_experts, capacity, d)
+    # un-sort slot/valid back to assignment order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(nk))
+    slot = flat_slot_sorted[inv]
+    valid = valid_sorted[inv]
+    return buffer, slot, valid
+
+
+def _expert_ffn(buf: jax.Array, wg: jax.Array, wu: jax.Array,
+                wd: jax.Array) -> jax.Array:
+    """Grouped SwiGLU over (E_local, T, D) with (E_local, D, F) weights."""
+    dtype = buf.dtype
+    g = jnp.einsum("etd,edf->etf", buf, wg.astype(dtype))
+    u = jnp.einsum("etd,edf->etf", buf, wu.astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    return jnp.einsum("etf,efd->etd", h, wd.astype(dtype))
+
+
+def _moe_local(x: jax.Array, router: jax.Array, wg: jax.Array, wu: jax.Array,
+               wd: jax.Array, *, k: int, num_experts: int, capacity_factor: float,
+               tp_axis: Optional[str], tp_size: int,
+               pmean_axes: Tuple[str, ...] = (),
+               token_replicated: bool = False
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Per-device MoE body (runs inside shard_map, or standalone if tp=1).
+
+    x: (B_l, S, D) local tokens; wg/wu/wd: (E_local, D, F) local experts.
+    Returns (y, aux_loss_local).
+    """
+    B, S, D = x.shape
+    N = B * S
+    xf = x.reshape(N, D)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)                   # (N, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss (computed on local shard)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_ids[:, 0], num_experts)), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = num_experts * jnp.sum(frac_tokens * frac_probs)
+    if pmean_axes:
+        aux = jax.lax.pmean(aux, pmean_axes)
+
+    ids = top_ids.reshape(-1)                                  # (N*k,)
+    capacity = int(math.ceil(N * k * capacity_factor / num_experts))
+    capacity = max(capacity, 1)
+    buf, slot, valid = _dispatch_local(xf, ids, capacity, num_experts, k)
+
+    if tp_axis is not None and tp_size > 1 and token_replicated:
+        # decode path (token count not divisible by tp): tokens are
+        # REPLICATED across the model axis; each rank computes only its
+        # expert slice of the dispatch buffer and a psum combines — no
+        # all-to-all needed for a handful of tokens per step.
+        e_local = num_experts // tp_size
+        rank = jax.lax.axis_index(tp_axis)
+        local_buf = jax.lax.dynamic_slice_in_dim(buf, rank * e_local,
+                                                 e_local, axis=0)
+        y_local = _expert_ffn(local_buf, wg, wu, wd)
+        y_buf = jnp.zeros_like(buf)
+        y_buf = jax.lax.dynamic_update_slice_in_dim(y_buf, y_local,
+                                                    rank * e_local, axis=0)
+        y_buf = jax.lax.psum(y_buf, tp_axis)
+    elif tp_axis is not None and tp_size > 1:
+        e_local = num_experts // tp_size
+        # (E, C, D) -> (M, E_l, C, D) -> exchange -> tokens for MY experts
+        send = buf.reshape(tp_size, e_local, capacity, D)
+        recv = jax.lax.all_to_all(send, tp_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        # recv: (M_src, E_l, C, D) -> (E_l, M_src*C, D)
+        work = jnp.moveaxis(recv, 0, 1).reshape(e_local, tp_size * capacity, D)
+        y_work = _expert_ffn(work, wg, wu, wd)
+        back = jnp.moveaxis(
+            y_work.reshape(e_local, tp_size, capacity, D), 1, 0)
+        y_buf = jax.lax.all_to_all(back, tp_axis, split_axis=0, concat_axis=0,
+                                   tiled=False)
+        y_buf = y_buf.reshape(num_experts, capacity, D)
+    else:
+        y_buf = _expert_ffn(buf, wg, wu, wd)
+
+    # gather processed assignments and combine with routing weights
+    y_flat = y_buf.reshape(num_experts * capacity, D)
+    y_assign = jnp.where(valid[:, None],
+                         jnp.take(y_flat, jnp.minimum(slot, y_flat.shape[0] - 1),
+                                  axis=0),
+                         0.0)
+    y_tok = jnp.sum(y_assign.reshape(N, k, D)
+                    * top_w.reshape(N, k, 1).astype(y_assign.dtype), axis=1)
+    return y_tok.reshape(B, S, D), aux
+
+
+def moe_ffn(env: Env, p: Params, x: jax.Array, *, num_experts: int,
+            experts_per_token: int, capacity_factor: float = 1.25
+            ) -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN sublayer.  Returns (y, load_balance_aux_loss)."""
+    tp = env.tp
+    if env.mesh is not None and tp > 1:
+        pmean_axes = tuple(env.batch_axes) + (env.tp_axis,)
+    else:
+        pmean_axes = ()
+    # train/prefill subdivide the sequence over the model axis (GShard);
+    # decode (seq 1) replicates tokens and splits by expert rank instead
+    token_parallel = x.shape[1] % max(tp, 1) == 0
+    body = functools.partial(
+        _moe_local, k=experts_per_token, num_experts=num_experts,
+        capacity_factor=capacity_factor,
+        tp_axis=env.tp_axis if tp > 1 else None, tp_size=tp,
+        pmean_axes=pmean_axes, token_replicated=not token_parallel)
+    if env.mesh is not None and tp > 1:
+        batch = env.batch_spec_entry()
+        seq_entry = env.tp_axis if token_parallel else None
+        mapped = jax.shard_map(
+            body, mesh=env.mesh,
+            in_specs=(P(batch, seq_entry, None), P(None, None),
+                      P(env.tp_axis, None, None), P(env.tp_axis, None, None),
+                      P(env.tp_axis, None, None)),
+            out_specs=(P(batch, seq_entry, None), P()),
+            check_vma=False)
+        y, aux = mapped(x, p["router"], p["wg"], p["wu"], p["wd"])
+    else:
+        y, aux = body(x, p["router"], p["wg"], p["wu"], p["wd"])
+    if "shared" in p:
+        y = y + swiglu(env, p["shared"], x)
+    return y, aux

@@ -1,0 +1,148 @@
+"""Mamba2 (state-space duality / SSD) blocks.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024): within a chunk the
+recurrence is materialized as an attention-like masked matmul (MXU-friendly);
+across chunks a small recurrent state (H, hd, N) is carried by a scan.  The
+intra-chunk compute is the Pallas-kernel hot spot (repro.kernels.ssd_scan);
+this module holds the reference path and the block plumbing (projections,
+depthwise causal conv, gating, decode-state updates).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Env, dense_init
+from .layers import rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int, n_state: int,
+             conv_width: int) -> Dict[str, int]:
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    d_conv = d_inner + 2 * n_state          # x, B, C go through the conv
+    return dict(d_inner=d_inner, nheads=nheads, d_conv=d_conv,
+                conv_width=conv_width, n_state=n_state, head_dim=head_dim)
+
+
+def init_ssm(key, d_model: int, *, expand: int, head_dim: int, n_state: int,
+             conv_width: int) -> Params:
+    dims = ssm_dims(d_model, expand, head_dim, n_state, conv_width)
+    k_in, k_out, k_conv, k_dt = jax.random.split(key, 4)
+    d_in = dims["d_inner"]
+    H = dims["nheads"]
+    return {
+        "in_proj": dense_init(k_in, (d_model, 2 * d_in + 2 * n_state + H)),
+        "conv_w": dense_init(k_conv, (conv_width, dims["d_conv"]), in_axis=0),
+        "conv_b": jnp.zeros((dims["d_conv"],)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k_dt, (H,)) *
+                    (math.log(0.1) - math.log(1e-3)) + math.log(1e-3)))),
+        "norm": jnp.zeros((d_in,)),
+        "out_proj": dense_init(k_out, (d_in, d_model)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (reference; kernels/ssd_scan provides the Pallas version
+# of the per-chunk compute).
+# ---------------------------------------------------------------------------
+
+def ssd_scan(env: Env, x: jax.Array, dt: jax.Array, A: jax.Array,
+             B: jax.Array, C: jax.Array, chunk: int,
+             init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """SSD over a sequence.
+
+    x: (Bt, S, H, hd)   dt: (Bt, S, H)   A: (H,) negative
+    B, C: (Bt, S, N)    (single SSM group, shared across heads)
+    Returns (y: (Bt, S, H, hd), final_state: (Bt, H, hd, N)).
+    """
+    if env.use_pallas:
+        from ..kernels.ssd_scan.ops import ssd_scan as ssd_kernel
+        return ssd_kernel(x, dt, A, B, C, chunk=chunk, init_state=init_state,
+                          interpret=env.interpret)
+    from ..kernels.ssd_scan.ref import ssd_reference
+    return ssd_reference(x, dt, A, B, C, chunk=chunk, init_state=init_state)
+
+
+def _depthwise_causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           state: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv over (B, S, C) with kernel (W, C).
+
+    ``state``: (B, W-1, C) history for streaming; returns (y, new_state).
+    """
+    Bt, S, Cch = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((Bt, W - 1, Cch), dtype=x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # (B, S+W-1, C)
+    # sum_w x[s + w] * k[w]  (causal: window ending at s)
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + S, :] * w[i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, S:, :] if W > 1 else state
+    return y, new_state
+
+
+def ssm_block(env: Env, p: Params, x: jax.Array, cfg, *,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """One Mamba2 block (no outer norm/residual).
+
+    cache = (ssm_state (B,H,hd,N), conv_state (B,W-1,Cconv)) for decoding;
+    None for train/prefill (returns the fresh cache so prefill can serve).
+    """
+    dims = ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim,
+                    cfg.ssm_state, cfg.ssm_conv_width)
+    d_in, H, hd, N = (dims["d_inner"], dims["nheads"], dims["head_dim"],
+                      dims["n_state"])
+    Bt, S, _ = x.shape
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    conv_state = cache[1] if cache is not None else None
+    conv_out, new_conv_state = _depthwise_causal_conv(
+        conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, Bmat, Cmat = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    xh = xin.reshape(Bt, S, H, hd)
+    if env.tp_axis:
+        xh = env.shard(xh, env.batch_spec_entry(), None, env.tp_axis, None)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+
+    if cache is None or S > 1:
+        init_state = cache[0] if cache is not None else None
+        y, final_state = ssd_scan(env, xh, dt, A, Bmat, Cmat,
+                                  chunk=cfg.ssm_chunk, init_state=init_state)
+    else:
+        # single-token decode: state' = exp(dt*A)*state + dt*B (x)
+        state = cache[0]                                        # (B,H,hd,N)
+        dt1 = dt[:, 0]                                          # (B,H)
+        dA = jnp.exp(dt1 * A[None, :])                          # (B,H)
+        xB = jnp.einsum("bhp,bn->bhpn", xh[:, 0].astype(jnp.float32),
+                        Bmat[:, 0].astype(jnp.float32))
+        final_state = dA[:, :, None, None] * state + dt1[:, :, None, None] * xB
+        y = jnp.einsum("bhpn,bn->bhp", final_state,
+                       Cmat[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)                          # (B,1,H,hd)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bt, S, d_in)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    new_cache = (final_state, new_conv_state)
+    return out, new_cache

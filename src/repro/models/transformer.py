@@ -1,0 +1,401 @@
+"""Unified decoder LM covering the dense / moe / ssm / hybrid / vlm families.
+
+One scanned layer stack; the per-layer block is chosen by family:
+
+* dense, vlm : pre-norm GQA attention + SwiGLU
+* moe        : pre-norm GQA attention + expert-parallel MoE FFN
+* ssm        : Mamba2 (SSD) block
+* hybrid     : Mamba2 backbone + ONE weight-shared attention+MLP block
+               applied every ``attn_period`` layers (zamba2)
+
+Entry points (all pure):
+
+* ``init(cfg, key)``                      -> params
+* ``forward(env, cfg, params, batch)``    -> (logits, aux)      [train]
+* ``prefill(env, cfg, params, batch)``    -> (logits, cache)
+* ``decode_step(env, cfg, params, cache, batch)`` -> (logits, cache)
+* ``init_cache(cfg, batch, max_len, env)`` -> cache pytree
+
+Layers are scanned (``jax.lax.scan``) with optional remat so the HLO is O(1)
+in depth — essential for 80-layer dry-runs and for activation memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import Env, dense_init, scan_layers, split_keys
+from .layers import (attention_block, embed, init_attention, init_embedding,
+                     init_swiglu, lm_head, rms_norm, swiglu)
+from .moe import init_moe, moe_ffn
+from .ssm import init_ssm, ssm_block, ssm_dims
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key) -> Params:
+    """One layer's params (unstacked)."""
+    ka, kf = jax.random.split(key)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,))}
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["attn"] = init_attention(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim, cfg.qkv_bias)
+        p["ln2"] = jnp.zeros((cfg.d_model,))
+        if cfg.family == "moe":
+            p["moe"] = init_moe(kf, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                cfg.shared_experts)
+        else:
+            p["mlp"] = init_swiglu(kf, cfg.d_model, cfg.d_ff)
+    elif cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = init_ssm(ka, cfg.d_model, expand=cfg.ssm_expand,
+                            head_dim=cfg.ssm_head_dim, n_state=cfg.ssm_state,
+                            conv_width=cfg.ssm_conv_width)
+    else:
+        raise ValueError(f"family {cfg.family} not handled by transformer.py")
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    k_emb, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    p: Params = {"embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model)}
+    layer_keys = split_keys(k_blocks, cfg.num_layers)
+    p["blocks"] = jax.vmap(lambda k: _init_block(cfg, k))(layer_keys)
+    if cfg.family == "hybrid":
+        ka, kf = jax.random.split(k_shared)
+        p["shared"] = {
+            "ln1": jnp.zeros((cfg.d_model,)),
+            "attn": init_attention(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   cfg.qkv_bias),
+            "ln2": jnp.zeros((cfg.d_model,)),
+            "mlp": init_swiglu(kf, cfg.d_model, cfg.d_ff),
+        }
+    p["final_norm"] = jnp.zeros((cfg.d_model,))
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_ffn_block(env: Env, cfg: ModelConfig, bp: Params, x: jax.Array,
+                    positions: jax.Array, *,
+                    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    kv_len: Optional[jax.Array] = None):
+    """Pre-norm attention + FFN.  Returns (x, aux, new_kv)."""
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    a, new_kv = attention_block(
+        env, bp["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, positions=positions,
+        kv_cache=kv_cache, kv_len=kv_len)
+    x = x + a
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe_ffn(env, bp["moe"], h, num_experts=cfg.num_experts,
+                         experts_per_token=cfg.experts_per_token,
+                         capacity_factor=cfg.moe_capacity)
+    else:
+        f, aux = swiglu(env, bp["mlp"], h), jnp.zeros((), jnp.float32)
+    x = env.shard_activations(x + f)
+    return x, aux, new_kv
+
+
+def _shared_block(env: Env, cfg: ModelConfig, sp: Params, x: jax.Array,
+                  positions: jax.Array, *,
+                  kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  kv_len: Optional[jax.Array] = None):
+    """zamba2's weight-shared attention+MLP block."""
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    a, new_kv = attention_block(
+        env, sp["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, positions=positions,
+        kv_cache=kv_cache, kv_len=kv_len)
+    x = x + a
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = env.shard_activations(x + swiglu(env, sp["mlp"], h))
+    return x, new_kv
+
+
+def _n_shared(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_period if cfg.attn_period else 0
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) — full sequence, no cache
+# ---------------------------------------------------------------------------
+
+def forward(env: Env, cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), aux_loss scalar)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(env, params["embed"], tokens, dtype=env.compute_dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        npatch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npatch:]], axis=1)
+    x = env.shard_activations(x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, aux = _ssm_stack_forward(env, cfg, params, x, positions)
+    else:
+        def body(carry, bp):
+            x = carry
+            x, aux, _ = _attn_ffn_block(env, cfg, bp, x, positions)
+            return x, aux
+        if env.remat:
+            body = jax.checkpoint(
+                body, policy=env.checkpoint_policy())
+        x, auxs = scan_layers(env, body, x, params["blocks"])
+        aux = jnp.mean(auxs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = lm_head(env, params["embed"], x, transpose=True)
+    else:
+        logits = lm_head(env, params["head"], x, transpose=False)
+    return logits, aux
+
+
+def _ssm_stack_forward(env: Env, cfg: ModelConfig, params: Params,
+                       x: jax.Array, positions: jax.Array):
+    """Scan over mamba blocks; hybrid applies the shared attn block every
+    ``attn_period`` layers via lax.cond (weights shared, O(1) HLO)."""
+    shared = params.get("shared")
+
+    def body(carry, inp):
+        x, idx = carry
+        bp = inp
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        s, _ = ssm_block(env, bp["ssm"], h, cfg)
+        x = env.shard_activations(x + s)
+        if shared is not None:
+            def with_attn(x):
+                y, _ = _shared_block(env, cfg, shared, x, positions)
+                return y
+            apply = jnp.equal((idx + 1) % cfg.attn_period, 0)
+            x = jax.lax.cond(apply, with_attn, lambda x: x, x)
+        return (x, idx + 1), jnp.zeros((), jnp.float32)
+
+    if env.remat:
+        body = jax.checkpoint(
+            body, policy=env.checkpoint_policy())
+    (x, _), auxs = scan_layers(env, body, (x, jnp.zeros((), jnp.int32)),
+                                params["blocks"])
+    return x, jnp.mean(auxs)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, env: Env,
+               dtype=jnp.bfloat16) -> Cache:
+    L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    if cfg.family in ("dense", "vlm", "moe"):
+        kv = lambda: jnp.zeros((L, batch, max_len, K, hd), dtype)
+        return {"k": kv(), "v": kv()}
+    dims = ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_head_dim,
+                    cfg.ssm_state, cfg.ssm_conv_width)
+    cache: Cache = {
+        "state": jnp.zeros((L, batch, dims["nheads"], dims["head_dim"],
+                            dims["n_state"]), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv_width - 1, dims["d_conv"]),
+                          dtype),
+    }
+    if cfg.family == "hybrid":
+        ns = _n_shared(cfg)
+        cache["shared_k"] = jnp.zeros((ns, batch, max_len, K, hd), dtype)
+        cache["shared_v"] = jnp.zeros((ns, batch, max_len, K, hd), dtype)
+    return cache
+
+
+def shard_cache(cfg: ModelConfig, cache: Cache, env: Env) -> Cache:
+    """Pin the cache to the canonical layout (same rules the dry-run uses
+    for in_shardings — a mismatch here breaks donation/aliasing and buys
+    involuntary full-cache copies)."""
+    if env.mesh is None:
+        return cache
+    from ..distributed.sharding import cache_spec
+    return {name: env.shard(arr, *cache_spec(env, name, arr.shape))
+            for name, arr in cache.items()}
+
+
+# ---------------------------------------------------------------------------
+# Prefill — full sequence, returns logits + populated cache
+# ---------------------------------------------------------------------------
+
+def prefill(env: Env, cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = embed(env, params["embed"], tokens, dtype=env.compute_dtype)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    x = env.shard_activations(x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, cache = _ssm_stack_prefill(env, cfg, params, x, positions, max_len)
+    else:
+        def body(carry, bp):
+            x = carry
+            x, _, (k, v) = _attn_ffn_block(env, cfg, bp, x, positions)
+            if max_len > S:
+                pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            return x, (k, v)
+        if env.remat:
+            body = jax.checkpoint(
+                body, policy=env.checkpoint_policy())
+        x, (ks, vs) = scan_layers(env, body, x, params["blocks"])
+        cache = {"k": ks, "v": vs}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = lm_head(env, params["embed"], x[:, -1:], transpose=True)
+    else:
+        logits = lm_head(env, params["head"], x[:, -1:], transpose=False)
+    return logits, shard_cache(cfg, cache, env)
+
+
+def _ssm_stack_prefill(env: Env, cfg: ModelConfig, params: Params,
+                       x: jax.Array, positions: jax.Array, max_len: int):
+    shared = params.get("shared")
+    B, S, _ = x.shape
+    ns = _n_shared(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    shared_k = jnp.zeros((max(ns, 1), B, max_len, K, hd), env.compute_dtype)
+    shared_v = jnp.zeros_like(shared_k)
+
+    def body(carry, bp):
+        x, idx, sk, sv = carry
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        s, (st, conv) = ssm_block(env, bp["ssm"], h, cfg)
+        x = env.shard_activations(x + s)
+        if shared is not None:
+            def with_attn(args):
+                x, sk, sv = args
+                y, (k, v) = _shared_block(env, cfg, shared, x, positions)
+                app = (idx + 1) // cfg.attn_period - 1
+                if max_len > S:
+                    pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                sk = jax.lax.dynamic_update_index_in_dim(sk, k, app, 0)
+                sv = jax.lax.dynamic_update_index_in_dim(sv, v, app, 0)
+                return y, sk, sv
+            apply = jnp.equal((idx + 1) % cfg.attn_period, 0)
+            x, sk, sv = jax.lax.cond(apply, with_attn,
+                                     lambda a: a, (x, sk, sv))
+        return (x, idx + 1, sk, sv), (st, conv)
+
+    if env.remat:
+        body = jax.checkpoint(
+            body, policy=env.checkpoint_policy())
+    (x, _, sk, sv), (states, convs) = scan_layers(env, body, (x, jnp.zeros((), jnp.int32), shared_k, shared_v),
+        params["blocks"])
+    cache: Cache = {"state": states, "conv": convs}
+    if cfg.family == "hybrid":
+        cache["shared_k"], cache["shared_v"] = sk, sv
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode — one token per sequence against the cache
+# ---------------------------------------------------------------------------
+
+def decode_step(env: Env, cfg: ModelConfig, params: Params, cache: Cache,
+                batch: Dict[str, Any]) -> Tuple[jax.Array, Cache]:
+    """batch: tokens (B,1) int32, pos (B,) int32 (next position to write).
+
+    Returns (logits (B,1,V), updated cache).
+    """
+    tokens, pos = batch["tokens"], batch["pos"]
+    B = tokens.shape[0]
+    x = embed(env, params["embed"], tokens, dtype=env.compute_dtype)
+    x = env.shard_batch(x)
+    positions = pos[:, None].astype(jnp.int32)
+    kv_len = pos + 1
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, new_cache = _ssm_stack_decode(env, cfg, params, cache, x,
+                                         positions, kv_len)
+    else:
+        def body(carry, inp):
+            x = carry
+            bp, k_l, v_l = inp
+            x, _, (k_l, v_l) = _attn_ffn_block(env, cfg, bp, x, positions,
+                                               kv_cache=(k_l, v_l),
+                                               kv_len=kv_len)
+            return x, (k_l, v_l)
+        x, (ks, vs) = scan_layers(env, body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = lm_head(env, params["embed"], x, transpose=True)
+    else:
+        logits = lm_head(env, params["head"], x, transpose=False)
+    return logits, shard_cache(cfg, new_cache, env)
+
+
+def _ssm_stack_decode(env: Env, cfg: ModelConfig, params: Params,
+                      cache: Cache, x: jax.Array, positions: jax.Array,
+                      kv_len: jax.Array):
+    shared = params.get("shared")
+    sk = cache.get("shared_k")
+    sv = cache.get("shared_v")
+
+    def body(carry, inp):
+        x, idx, sk, sv = carry
+        bp, st_l, conv_l = inp
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        s, (st_l, conv_l) = ssm_block(env, bp["ssm"], h, cfg,
+                                      cache=(st_l, conv_l))
+        x = env.shard_activations(x + s)
+        if shared is not None:
+            def with_attn(args):
+                x, sk, sv = args
+                app = (idx + 1) // cfg.attn_period - 1
+                k_l = jax.lax.dynamic_index_in_dim(sk, app, 0, keepdims=False)
+                v_l = jax.lax.dynamic_index_in_dim(sv, app, 0, keepdims=False)
+                y, (k_l, v_l) = _shared_block(env, cfg, shared, x, positions,
+                                              kv_cache=(k_l, v_l),
+                                              kv_len=kv_len)
+                sk = jax.lax.dynamic_update_index_in_dim(sk, k_l, app, 0)
+                sv = jax.lax.dynamic_update_index_in_dim(sv, v_l, app, 0)
+                return y, sk, sv
+            apply = jnp.equal((idx + 1) % cfg.attn_period, 0)
+            x, sk, sv = jax.lax.cond(apply, with_attn, lambda a: a,
+                                     (x, sk, sv))
+        return (x, idx + 1, sk, sv), (st_l, conv_l)
+
+    if sk is None:
+        B = x.shape[0]
+        sk = jnp.zeros((1, B, 1, max(cfg.num_kv_heads, 1),
+                        max(cfg.head_dim, 1)), x.dtype)
+        sv = sk
+    (x, _, sk, sv), (states, convs) = scan_layers(env, body, (x, jnp.zeros((), jnp.int32), sk, sv),
+        (params["blocks"], cache["state"], cache["conv"]))
+    new_cache: Cache = {"state": states, "conv": convs}
+    if cfg.family == "hybrid":
+        new_cache["shared_k"], new_cache["shared_v"] = sk, sv
+    return x, new_cache

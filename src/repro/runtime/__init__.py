@@ -1,0 +1,7 @@
+"""JAX streaming runtime: operators, micro-batch streams, and an executor
+that enacts a planned Schedule on real JAX devices (the "Storm" substrate of
+the reproduction)."""
+
+from .operators import OPERATORS, make_operator
+from .stream import MicroBatch, SyntheticSource
+from .executor import StreamExecutor, ExecutionReport

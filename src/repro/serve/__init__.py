@@ -1,0 +1,4 @@
+"""Serving substrate: continuous-batching engine + model-driven planner."""
+
+from .engine import ServeEngine, Request
+from .planner import serving_perf_models, plan_serving

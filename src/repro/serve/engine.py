@@ -1,0 +1,144 @@
+"""Continuous-batching serving engine.
+
+Slot-based engine: ``max_batch`` sequence slots share one decode cache;
+requests prefill into a free slot and then ride the batched decode step.
+Shapes are static (slot count, max_len) so the two jitted programs —
+``prefill_one`` and ``decode_all`` — compile once.
+
+The scheduling of chips between prefill and decode pools is decided by the
+paper's MBA/SAM (see planner.py); this engine is the execution layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.api import ModelApi
+from ..models.common import Env
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S_prompt,) int32
+    max_new_tokens: int
+    submitted: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, api: ModelApi, env: Env, params: Any, *,
+                 max_batch: int = 8, max_len: int = 512,
+                 eos_token: int = -1):
+        self.api = api
+        self.env = env
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos = eos_token
+        self.cache = api.init_cache(max_batch, max_len, env)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)       # next write index
+        self.slot_budget = np.zeros(max_batch, np.int32)
+        self.slot_last_token = np.zeros(max_batch, np.int32)
+        self.pending: Deque[Request] = deque()
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda params, cache, batch: api.decode_step(env, params, cache, batch))
+        self._prefill = jax.jit(
+            lambda params, batch: api.prefill(env, params, batch,
+                                              max_len=self.max_len))
+
+    # -- API ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(Request(rid, np.asarray(prompt, np.int32),
+                                    max_new_tokens, submitted=time.perf_counter()))
+        return rid
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.slot_req)
+
+    def step(self) -> List[Request]:
+        """One engine iteration: admit + prefill one request if a slot is
+        free, then one batched decode step.  Returns finished requests."""
+        self._admit()
+        finished = self._decode_tick()
+        return finished
+
+    def run(self, *, max_ticks: int = 10000) -> List[Request]:
+        done: List[Request] = []
+        ticks = 0
+        while self.has_work() and ticks < max_ticks:
+            done.extend(self.step())
+            ticks += 1
+        return done
+
+    # -- internals ---------------------------------------------------------------
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        while free and self.pending:
+            slot = free.pop(0)
+            req = self.pending.popleft()
+            prompt = req.prompt[: self.max_len - req.max_new_tokens - 1]
+            batch = {"tokens": jnp.asarray(prompt[None, :], jnp.int32)}
+            if self.api.cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, self.api.cfg.encoder_seq, self.api.cfg.d_model),
+                    self.env.compute_dtype)
+            if self.api.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, min(self.api.cfg.num_patches, len(prompt)),
+                     self.api.cfg.d_model), self.env.compute_dtype)
+            logits, cache1 = self._prefill(self.params, batch)
+            self._insert_cache(slot, cache1)
+            next_tok = int(jnp.argmax(logits[0, -1]))
+            req.first_token_at = time.perf_counter()
+            req.output.append(next_tok)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(prompt)
+            self.slot_budget[slot] = req.max_new_tokens - 1
+            self.slot_last_token[slot] = next_tok
+
+    def _insert_cache(self, slot: int, cache1: Dict) -> None:
+        def ins(dst, src):
+            # dst: (L, B, ...), src: (L, 1, ...)
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, axis=1)
+        self.cache = jax.tree.map(ins, self.cache, cache1)
+
+    def _decode_tick(self) -> List[Request]:
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        tokens = jnp.asarray(self.slot_last_token[:, None], jnp.int32)
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": tokens, "pos": pos})
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1),
+                                 np.int32)
+        finished: List[Request] = []
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = int(next_tokens[slot])
+            req.output.append(tok)
+            self.slot_pos[slot] += 1
+            self.slot_budget[slot] -= 1
+            self.slot_last_token[slot] = tok
+            done = (self.slot_budget[slot] <= 0 or tok == self.eos
+                    or self.slot_pos[slot] >= self.max_len - 1)
+            if done:
+                req.finished_at = time.perf_counter()
+                finished.append(req)
+                self.slot_req[slot] = None
+        return finished

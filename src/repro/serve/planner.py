@@ -1,0 +1,112 @@
+"""Model-driven serving planner — the paper's technique as a first-class
+feature of the LM framework.
+
+Disaggregated serving is a streaming dataflow:
+
+    requests --> [ prefill ] --sel=gen_len--> [ decode ] --> sink
+
+"Threads" are TPU chips, a "slot" is one 8-chip host (ICI island), and the
+PerfModel P(tau) = requests-or-tokens/s of the stage with tau chips on one
+host comes from the analytic roofline (repro.distributed.roofline) instead
+of Alg. 1 wall-clock trials — same non-linear shape (flat/bell curves from
+ICI contention and MXU-tile decay), same consumers: MBA picks chips per
+stage at each stage's best operating point; SAM gangs each stage's chips
+onto exclusive hosts, which is exactly gang scheduling of a model-parallel
+group on an ICI island.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from ..core.dag import Dataflow
+from ..core.perfmodel import ModelLibrary, ModelPoint, PerfModel
+from ..core.scheduler import Schedule, plan
+from ..distributed.roofline import stage_hbm_fraction, stage_tokens_per_sec
+
+CHIPS_PER_HOST = 8
+
+
+def serving_perf_models(cfg: ModelConfig, *, prompt_len: int, gen_len: int,
+                        batch: int, max_chips_per_host: int = CHIPS_PER_HOST
+                        ) -> ModelLibrary:
+    """PerfModels for the prefill/decode stages: tau = chips on one host.
+
+    Rates are normalized to *requests/s* for prefill and *generated
+    tokens/s / gen_len = requests/s-equivalent* for decode, so GetRate's
+    selectivity bookkeeping stays in request units end-to-end.
+    """
+    lib = ModelLibrary()
+    for stage in ("prefill", "decode"):
+        pts = {}
+        for tau in range(1, max_chips_per_host + 1):
+            context = prompt_len if stage == "prefill" else prompt_len + gen_len
+            tps = stage_tokens_per_sec(cfg, chips=tau, batch=batch,
+                                       context=context, stage=stage)
+            if stage == "prefill":
+                rate = tps / prompt_len          # requests/s
+            else:
+                rate = tps                        # decode tokens/s
+            cpu = min(1.0, tau / max_chips_per_host)
+            mem = min(1.0, stage_hbm_fraction(
+                cfg, chips=tau, batch=batch, context=context)
+                / max_chips_per_host * tau)
+            pts[tau] = (rate, cpu, mem)
+        lib.add(PerfModel.from_points(stage, pts))
+    from ..core.perfmodel import PAPER_MODELS
+    lib.add(PAPER_MODELS["source"])
+    lib.add(PAPER_MODELS["sink"])
+    return lib
+
+
+def serving_dag(gen_len: int) -> Dataflow:
+    df = Dataflow("serving")
+    df.add_task("src", "source", is_source=True)
+    df.add_task("prefill", "prefill")
+    df.add_task("decode", "decode")
+    df.add_task("snk", "sink", is_sink=True)
+    df.add_edge("src", "prefill", selectivity=1.0)
+    # each admitted request emits gen_len decode steps
+    df.add_edge("prefill", "decode", selectivity=float(gen_len))
+    df.add_edge("decode", "snk", selectivity=1.0 / gen_len)
+    return df
+
+
+@dataclasses.dataclass
+class ServingPlan:
+    schedule: Schedule
+    models: ModelLibrary
+    request_rate: float
+    prefill_chips: int
+    decode_chips: int
+    hosts: int
+
+    def describe(self) -> str:
+        return (f"ServingPlan: {self.request_rate:g} req/s -> "
+                f"prefill={self.prefill_chips} chips, "
+                f"decode={self.decode_chips} chips on {self.hosts} hosts "
+                f"({self.schedule.acquired_slots} host-slots)")
+
+
+def plan_serving(cfg: ModelConfig, *, request_rate: float, prompt_len: int,
+                 gen_len: int, batch: int = 32,
+                 allocator: str = "mba", mapper: str = "sam") -> ServingPlan:
+    """MBA+SAM chip allocation for a target request rate."""
+    models = serving_perf_models(cfg, prompt_len=prompt_len, gen_len=gen_len,
+                                 batch=batch)
+    dag = serving_dag(gen_len)
+    # hosts expose CHIPS_PER_HOST "threads" per slot; VM sizes in host units
+    schedule = plan(dag, request_rate, models, allocator=allocator,
+                    mapper=mapper, vm_sizes=(4, 2, 1))
+    alloc = schedule.allocation.tasks
+    return ServingPlan(
+        schedule=schedule,
+        models=models,
+        request_rate=request_rate,
+        prefill_chips=alloc["prefill"].threads,
+        decode_chips=alloc["decode"].threads,
+        hosts=len(schedule.vms),
+    )

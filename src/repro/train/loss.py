@@ -1,0 +1,37 @@
+"""Losses: next-token cross-entropy with masking + z-loss.
+
+The softmax runs in fp32 over the (possibly tp-sharded) vocab axis; XLA
+turns the reductions into all-reduces over the tp axis.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits: jax.Array, labels: jax.Array,
+                    mask: Optional[jax.Array] = None,
+                    z_loss_coef: float = 1e-4
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """logits: (B, S, V); labels: (B, S) — already aligned (labels[t] is the
+    target for logits[t]).  Returns (loss, metrics)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)          # (B, S)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    z = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    zloss = z_loss_coef * jnp.sum(z * mask) / denom
+    metrics = {
+        "nll": loss,
+        "z_loss": zloss,
+        "accuracy": jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom,
+    }
+    return loss + zloss, metrics

@@ -1,0 +1,178 @@
+"""Optimizer: AdamW with mixed-precision state, schedules (cosine + WSD),
+gradient clipping, and optional int8 second-moment quantization (the
+beyond-paper trick that fits kimi-k2's optimizer state on 512 chips).
+
+Implemented from scratch (no optax dependency): states are pytrees mirroring
+the params and inherit their shardings, so FSDP/TP sharding of params gives
+ZeRO-style sharded optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(1, warmup))
+        t = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1,
+                 min_frac: float = 0.01) -> Callable[[jax.Array], jax.Array]:
+    """Warmup-Stable-Decay (minicpm): linear warmup, long stable plateau,
+    sharp decay over the final ``decay_frac`` of training."""
+    decay_steps = max(1, int(total * decay_frac))
+    stable_end = total - decay_steps
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(1, warmup))
+        t = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+        decay = base_lr * (min_frac ** t)   # exponential anneal
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < stable_end, base_lr, decay))
+    return lr
+
+
+def get_schedule(name: str, base_lr: float, warmup: int, total: int
+                 ) -> Callable[[jax.Array], jax.Array]:
+    if name == "wsd":
+        return wsd_schedule(base_lr, warmup, total)
+    return cosine_schedule(base_lr, warmup, total)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Params            # first moment (fp32 or bf16)
+    nu: Params            # second moment (fp32, or int8-quantized blocks)
+    nu_scale: Optional[Params]  # per-block scales when quantized
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"
+    warmup: int = 100
+    total_steps: int = 10000
+    quantize_nu: bool = False     # int8 block-quantized second moment
+    quant_block: int = 256
+    mu_dtype: Any = jnp.float32   # bf16 halves first-moment memory
+
+
+def _quantize_blocks(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-block int8 quantization of a non-negative tensor ALONG THE LAST
+    AXIS only — a full flatten would scramble the tensor's sharding and
+    force SPMD to replicate terabyte-scale MoE moments (measured: 8.8 TiB
+    per device on kimi-k2); splitting just the last dim keeps every leading
+    dim's sharding intact."""
+    last = x.shape[-1]
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    nb = (last + pad) // block
+    blocks = x.reshape(*x.shape[:-1], nb, block)
+    scale = jnp.max(blocks, axis=-1, keepdims=True) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(blocks / scale), 0, 127).astype(jnp.int8)
+    return q.reshape(*x.shape[:-1], nb * block), scale[..., 0]
+
+
+def _dequantize_blocks(q: jax.Array, scale: jax.Array, shape,
+                       block: int) -> jax.Array:
+    nb = scale.shape[-1]
+    blocks = q.reshape(*q.shape[:-1], nb, block).astype(jnp.float32)
+    deq = blocks * scale[..., None]
+    return deq.reshape(*q.shape[:-1], nb * block)[..., :shape[-1]].reshape(shape)
+
+
+def adamw_init(params: Params, cfg: AdamWConfig) -> AdamState:
+    mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=cfg.mu_dtype), params)
+    if cfg.quantize_nu:
+        nu = jax.tree.map(
+            lambda p: _quantize_blocks(jnp.zeros_like(p, jnp.float32),
+                                       cfg.quant_block)[0], params)
+        nu_scale = jax.tree.map(
+            lambda p: _quantize_blocks(jnp.zeros_like(p, jnp.float32),
+                                       cfg.quant_block)[1], params)
+    else:
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        nu_scale = None
+    return AdamState(jnp.zeros((), jnp.int32), mu, nu, nu_scale)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Params, state: AdamState, params: Params,
+                 cfg: AdamWConfig) -> Tuple[Params, AdamState, Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    sched = get_schedule(cfg.schedule, cfg.lr, cfg.warmup, cfg.total_steps)
+    lr = sched(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_mu = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g).astype(cfg.mu_dtype),
+        state.mu, grads)
+
+    if cfg.quantize_nu:
+        def upd_nu(q, s, g, p):
+            nu = _dequantize_blocks(q, s, p.shape, cfg.quant_block)
+            nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+            q2, s2 = _quantize_blocks(nu, cfg.quant_block)
+            return (q2, s2, nu)
+        triples = jax.tree.map(upd_nu, state.nu, state.nu_scale, grads, params)
+        is_triple = lambda t: isinstance(t, tuple) and len(t) == 3
+        new_nu = jax.tree.map(lambda t: t[0], triples, is_leaf=is_triple)
+        new_scale = jax.tree.map(lambda t: t[1], triples, is_leaf=is_triple)
+        nu_eff = jax.tree.map(lambda t: t[2], triples, is_leaf=is_triple)
+    else:
+        new_nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g),
+                              state.nu, grads)
+        new_scale = None
+        nu_eff = new_nu
+
+    def step_param(p, m, v):
+        update = (m.astype(jnp.float32) / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(step_param, params, new_mu, nu_eff)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamState(step, new_mu, new_nu, new_scale), metrics

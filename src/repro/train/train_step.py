@@ -1,0 +1,98 @@
+"""Train-step factory: fwd + bwd + AdamW, mixed precision, microbatch
+gradient accumulation, MoE aux loss, donation-friendly signature.
+
+``TrainState`` is a plain pytree so pjit shards it with the param rules
+(ZeRO-sharded optimizer states fall out of FSDP param sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.api import ModelApi
+from ..models.common import Env
+from .loss import next_token_loss
+from .optimizer import AdamState, AdamWConfig, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any           # bf16 working copy is derived per-step; this is fp32 master
+    opt: AdamState
+
+
+def init_train_state(api: ModelApi, key, opt_cfg: AdamWConfig) -> TrainState:
+    params = api.init(key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def make_loss_fn(api: ModelApi, env: Env, aux_coef: float = 0.01,
+                 label_mask_fn: Optional[Callable] = None):
+    """Loss over the low-precision WORKING copy of the params.
+
+    Differentiating wrt the bf16 copy (rather than the fp32 master) makes
+    the gradients — and, crucially, their cross-device reduction — bf16,
+    halving the gradient all-reduce wire bytes; the optimizer accumulates
+    into fp32 master state regardless (standard mixed-precision recipe).
+    """
+    def loss_fn(compute_params, batch):
+        logits, aux = api.forward(env, compute_params, batch)
+        mask = label_mask_fn(batch) if label_mask_fn else None
+        loss, metrics = next_token_loss(logits, batch["labels"], mask)
+        total = loss + aux_coef * aux
+        metrics["aux_loss"] = aux
+        metrics["loss"] = total
+        return total, metrics
+    return loss_fn
+
+
+def _working_copy(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def make_train_step(api: ModelApi, env: Env, opt_cfg: AdamWConfig,
+                    *, microbatches: int = 1, aux_coef: float = 0.01,
+                    label_mask_fn: Optional[Callable] = None):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    With ``microbatches > 1`` the global batch is split on the leading axis
+    and gradients accumulate in fp32 through a scan (activation memory drops
+    by the microbatch factor; one optimizer step at the end).
+    """
+    loss_fn = make_loss_fn(api, env, aux_coef, label_mask_fn)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        working = _working_copy(state.params, env.compute_dtype)
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(working, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc_body(carry, mbatch):
+                acc = carry
+                (_, metrics), grads = grad_fn(working, mbatch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    acc, grads)
+                return acc, metrics
+            grads, mmetrics = jax.lax.scan(acc_body, zero, mb)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), mmetrics)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics.update(opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

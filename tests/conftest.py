@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; only launch/dryrun (a fresh
+process) forces 512 host devices."""
+
+import jax
+import pytest
+
+from repro.core import paper_library
+
+
+@pytest.fixture(scope="session")
+def lib():
+    return paper_library()
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,90 @@
+"""LSA (Alg. 2) and MBA (Alg. 3) allocation."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (ALL_DAGS, MICRO_DAGS, allocate_lsa, allocate_mba,
+                        linear_dag, paper_library)
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return paper_library()
+
+
+def test_lsa_blob_paper_numbers(lib):
+    """§8.4.1: LSA gives the Blob task 50 threads with 337% CPU and 1196%
+    memory for the Linear DAG at 100 t/s."""
+    alloc = allocate_lsa(linear_dag(), 100.0, lib)
+    blob = alloc.tasks["b"]
+    assert blob.threads == 50                       # ceil(100 / 2.0)
+    assert blob.cpu * 100 == pytest.approx(337, rel=0.05)
+    assert blob.mem * 100 == pytest.approx(1196, rel=0.01)
+
+
+def test_mba_blob_bundles(lib):
+    """MBA packs full bundles of 50 threads at the 30 t/s operating point."""
+    alloc = allocate_mba(linear_dag(), 100.0, lib)
+    blob = alloc.tasks["b"]
+    assert blob.bundle_size == 50
+    assert blob.full_bundles == 3                   # 3 x 30 = 90 of 100 t/s
+    assert blob.threads > 150                       # + residual threads
+    # full bundles charged a whole slot each
+    assert blob.cpu >= 3.0 and blob.mem >= 3.0
+
+
+def test_static_source_sink(lib):
+    alloc = allocate_mba(linear_dag(), 100.0, lib)
+    assert alloc.tasks["src"].threads == 1
+    assert alloc.tasks["src"].cpu == pytest.approx(0.10)
+    assert alloc.tasks["src"].mem == pytest.approx(0.15)
+    assert alloc.tasks["snk"].mem == pytest.approx(0.20)
+
+
+@pytest.mark.parametrize("dag_name", list(MICRO_DAGS))
+@pytest.mark.parametrize("omega", [50, 100, 200])
+def test_lsa_allocates_more_slots_than_mba(lib, dag_name, omega):
+    """Fig. 7's headline: LSA's linear extrapolation over-allocates ~2x."""
+    dag = MICRO_DAGS[dag_name]()
+    lsa = allocate_lsa(dag, omega, lib)
+    mba = allocate_mba(dag, omega, lib)
+    assert lsa.slots >= mba.slots
+    assert lsa.slots >= 1.5 * mba.slots             # paper: ~2x
+
+
+@pytest.mark.parametrize("dag_name", list(MICRO_DAGS))
+def test_mba_allocates_more_threads(lib, dag_name):
+    """§8.4.1: MBA allocates ~3x more threads (cheap) for fewer slots."""
+    dag = MICRO_DAGS[dag_name]()
+    lsa = allocate_lsa(dag, 100, lib)
+    mba = allocate_mba(dag, 100, lib)
+    assert mba.total_threads > 2 * lsa.total_threads
+
+
+@hypothesis.given(omega=st.floats(min_value=5, max_value=500),
+                  dag_name=st.sampled_from(sorted(ALL_DAGS)))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_allocation_invariants(omega, dag_name):
+    """Every task gets >= 1 thread; resources are positive and finite;
+    slot estimate covers both CPU and memory totals."""
+    lib = paper_library()
+    dag = ALL_DAGS[dag_name]()
+    for alloc in (allocate_lsa(dag, omega, lib), allocate_mba(dag, omega, lib)):
+        for name, ta in alloc.tasks.items():
+            assert ta.threads >= 1
+            assert 0 <= ta.cpu < 1e4 and 0 <= ta.mem < 1e4
+        assert alloc.slots >= alloc.total_cpu - 1
+        assert alloc.slots >= alloc.total_mem - 1
+
+
+@hypothesis.given(omega=st.floats(min_value=5, max_value=300))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_allocation_monotone_in_rate(omega):
+    """More input rate never needs fewer slots."""
+    lib = paper_library()
+    dag = linear_dag()
+    a1 = allocate_mba(dag, omega, lib)
+    a2 = allocate_mba(dag, omega * 2, lib)
+    assert a2.slots >= a1.slots
+    assert a2.total_threads >= a1.total_threads

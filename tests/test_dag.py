@@ -1,0 +1,77 @@
+"""DAG structure + GetRate recurrence (paper §3, §6)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Routing,
+                        diamond_dag, linear_dag, star_dag)
+
+
+def test_all_dags_acyclic_and_connected():
+    for name, mk in ALL_DAGS.items():
+        dag = mk()
+        order = dag.topo_order()
+        assert len(order) == len(dag.tasks)
+        assert dag.sources() and dag.sinks()
+
+
+def test_linear_rates_uniform():
+    dag = linear_dag()
+    rates = dag.get_rates(100.0)
+    for t in ("x", "p", "f", "b", "t"):
+        assert rates[t] == pytest.approx(100.0)
+
+
+def test_star_hub_sees_double_rate():
+    dag = star_dag()
+    rates = dag.get_rates(100.0)
+    assert rates["x"] == pytest.approx(200.0)   # hub: two in-edges
+    assert rates["p"] == pytest.approx(100.0)   # split out-edges
+    assert rates["t"] == pytest.approx(100.0)
+
+
+def test_diamond_fan_in_recovers_full_rate():
+    dag = diamond_dag()
+    rates = dag.get_rates(90.0)
+    assert rates["x"] == pytest.approx(90.0)
+    assert rates["p"] == pytest.approx(30.0)
+    assert rates["f"] == pytest.approx(90.0)
+
+
+def test_critical_path_ordering():
+    # §8.6: latency ordering follows critical path (diamond <= star < linear;
+    # the paper counts 4/5/7 — our explicit src/snk tasks shift the absolute
+    # numbers but not the ordering)
+    assert diamond_dag().critical_path_len() <= star_dag().critical_path_len()
+    assert star_dag().critical_path_len() < linear_dag().critical_path_len()
+
+
+@hypothesis.given(st.floats(min_value=0.1, max_value=1e5))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_rates_linear_in_omega(omega):
+    """GetRate is linear: rates(c*omega) = c*rates(omega)."""
+    for mk in list(MICRO_DAGS.values()) + list(APP_DAGS.values()):
+        dag = mk()
+        r1 = dag.get_rates(omega)
+        r2 = dag.get_rates(2 * omega)
+        for t in r1:
+            assert r2[t] == pytest.approx(2 * r1[t], rel=1e-9)
+
+
+def test_selectivity_scales_downstream():
+    df = Dataflow("sel")
+    df.add_task("a", "pi", is_source=True)
+    df.add_task("b", "pi")
+    df.add_edge("a", "b", selectivity=3.0)
+    assert df.get_rates(10.0)["b"] == pytest.approx(30.0)
+
+
+def test_cycle_detection():
+    df = Dataflow("cyc")
+    df.add_task("a", "pi")
+    df.add_task("b", "pi")
+    df.add_edge("a", "b")
+    df.add_edge("b", "a")
+    with pytest.raises(ValueError):
+        df.topo_order()

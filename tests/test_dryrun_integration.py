@@ -1,0 +1,28 @@
+"""Integration: the dry-run driver lowers+compiles a real cell on the
+512-forced-device production mesh, in a fresh subprocess (XLA_FLAGS must be
+set before jax import, which the driver does)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("mamba2-370m", "decode_32k")])
+def test_dryrun_cell_compiles(tmp_path, arch, shape):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--no-calibrate",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    cell = json.load(open(tmp_path / f"pod16x16-{arch}-{shape}.json"))
+    assert cell["status"] == "ok"
+    assert cell["chips"] == 256
+    assert cell["cost"]["flops_per_device"] > 0
+    assert cell["memory"]["total_per_device"] > 0

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_reference
+
+RNG = np.random.default_rng(42)
+
+
+def _mk_qkv(B, Sq, Skv, H, K, hd, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, K, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, K, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 64, 4, 2, 32),     # GQA
+    (1, 128, 128, 8, 8, 64),   # MHA
+    (2, 96, 96, 4, 1, 16),     # MQA, non-pow2 seq
+    (1, 64, 64, 2, 2, 112),    # kimi-style head_dim (lane padding)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(shape, dtype):
+    B, Sq, Skv, H, K, hd = shape
+    q, k, v = _mk_qkv(B, Sq, Skv, H, K, hd, dtype)
+    out = flash_attention(q, k, v, interpret=True, block_q=32, block_k=32)
+    ref = jnp.swapaxes(
+        reference_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                            jnp.swapaxes(v, 1, 2)), 1, 2)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_q_offset():
+    """Chunked-prefill masking: q block starting at absolute position 32."""
+    B, S, H, K, hd = 1, 32, 2, 2, 16
+    q, k, v = _mk_qkv(B, S, 2 * S, H, K, hd, jnp.float32)
+    off = jnp.full((B,), 32, jnp.int32)
+    out = flash_attention(q, k, v, q_offset=off, interpret=True,
+                          block_q=16, block_k=16)
+    ref = jnp.swapaxes(
+        reference_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                            jnp.swapaxes(v, 1, 2), q_offset=off), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_grad_matches_reference():
+    B, S, H, K, hd = 1, 64, 2, 1, 32
+    q, k, v = _mk_qkv(B, S, S, H, K, hd, jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, interpret=True,
+                                       block_q=32, block_k=32) ** 2)
+
+    def loss_ref(q, k, v):
+        out = reference_attention(jnp.swapaxes(q, 1, 2),
+                                  jnp.swapaxes(k, 1, 2),
+                                  jnp.swapaxes(v, 1, 2))
+        return jnp.sum(jnp.swapaxes(out, 1, 2) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 4, 8, 16, 16),
+    (1, 50, 2, 16, 8, 16),     # padding path
+    (2, 128, 3, 8, 32, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_oracle(shape, dtype):
+    Bt, S, H, P, N, Q = shape
+    x = jnp.asarray(RNG.normal(size=(Bt, S, H, P)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(Bt, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(Bt, S, N)), dtype)
+    C = jnp.asarray(RNG.normal(size=(Bt, S, N)), dtype)
+    y_k, fs_k = ssd_scan(x, dt, A, B, C, chunk=Q, interpret=True)
+    y_r, fs_r = ssd_reference(x, dt, A, B, C, chunk=Q)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(fs_k), np.asarray(fs_r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_scan_init_state():
+    Bt, S, H, P, N = 1, 32, 2, 4, 8
+    x = jnp.asarray(RNG.normal(size=(Bt, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(Bt, S, H)), jnp.float32)
+    A = -jnp.ones((H,), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(Bt, S, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(Bt, S, N)), jnp.float32)
+    init = jnp.asarray(RNG.normal(size=(Bt, H, P, N)), jnp.float32)
+    y_k, fs_k = ssd_scan(x, dt, A, B, C, chunk=16, init_state=init,
+                         interpret=True)
+    y_r, fs_r = ssd_reference(x, dt, A, B, C, chunk=16, init_state=init)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_streaming_equals_one_shot():
+    """Two half-sequence kernel calls chained by state == one full call
+    (the serving path relies on this)."""
+    Bt, S, H, P, N = 1, 64, 2, 8, 16
+    x = jnp.asarray(RNG.normal(size=(Bt, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(Bt, S, H)), jnp.float32)
+    A = -jnp.ones((H,), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(Bt, S, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(Bt, S, N)), jnp.float32)
+    y_full, fs_full = ssd_scan(x, dt, A, B, C, chunk=16, interpret=True)
+    h = S // 2
+    y1, s1 = ssd_scan(x[:, :h], dt[:, :h], A, B[:, :h], C[:, :h],
+                      chunk=16, interpret=True)
+    y2, s2 = ssd_scan(x[:, h:], dt[:, h:], A, B[:, h:], C[:, h:],
+                      chunk=16, init_state=s1, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(fs_full),
+                               rtol=1e-4, atol=1e-4)

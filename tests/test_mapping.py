@@ -1,0 +1,114 @@
+"""DSM / RSM / SAM mapping + VM acquisition (paper §7)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (MICRO_DAGS, InsufficientResourcesError, VM,
+                        acquire_vms, allocate_lsa, allocate_mba, linear_dag,
+                        map_dsm, map_rsm, map_sam, paper_library)
+from repro.core.mapping import make_threads
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return paper_library()
+
+
+# -- acquisition (§7.1) ------------------------------------------------------
+
+def test_acquire_exact_multiples():
+    vms = acquire_vms(8, (4, 2, 1))
+    assert [v.num_slots for v in vms] == [4, 4]
+
+
+def test_acquire_remainder_smallest_fit():
+    vms = acquire_vms(7, (4, 2, 1))
+    assert [v.num_slots for v in vms] == [4, 1, 1][:len(vms)] or \
+           [v.num_slots for v in vms] == [4, 4]  # never under-provisions
+    assert sum(v.num_slots for v in vms) >= 7
+
+
+@hypothesis.given(st.integers(min_value=1, max_value=200))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_acquire_covers_and_bounded_overshoot(rho):
+    vms = acquire_vms(rho, (4, 2, 1))
+    total = sum(v.num_slots for v in vms)
+    assert total >= rho
+    assert total - rho <= 3        # bounded by (2^(p-1) - 1) for p=4 (§7.1)
+
+
+# -- generic mapping invariants ------------------------------------------------
+
+@pytest.mark.parametrize("mapper_name", ["dsm", "rsm", "sam"])
+@pytest.mark.parametrize("alloc_name", ["lsa", "mba"])
+def test_every_thread_mapped_once(lib, mapper_name, alloc_name):
+    from repro.core.mapping import MAPPERS
+    from repro.core.allocation import ALLOCATORS
+    dag = linear_dag()
+    alloc = ALLOCATORS[alloc_name](dag, 100, lib)
+    vms = acquire_vms(alloc.slots * 3)   # generous cluster
+    mapping = MAPPERS[mapper_name](dag, alloc, vms, lib)
+    threads = make_threads(alloc)
+    assert set(mapping.assignment) == set(threads)
+    assert len(mapping.assignment) == alloc.total_threads
+
+
+def test_dsm_round_robin_balance(lib):
+    dag = linear_dag()
+    alloc = allocate_mba(dag, 100, lib)
+    vms = acquire_vms(8)
+    mapping = map_dsm(dag, alloc, vms, lib)
+    counts = [len(mapping.threads_on_slot(s)) for s in mapping.slots()]
+    assert max(counts) - min(counts) <= 1   # perfectly balanced
+
+
+def test_rsm_respects_slot_memory(lib):
+    dag = linear_dag()
+    alloc = allocate_lsa(dag, 50, lib)
+    vms = acquire_vms(alloc.slots + 2)
+    mapping = map_rsm(dag, alloc, vms, lib)
+    for slot, counts in mapping.slot_task_counts().items():
+        mem = sum(lib[alloc.tasks[t].kind].M(1) * q for t, q in counts.items())
+        assert mem <= 1.0 + 1e-6
+
+
+def test_rsm_raises_when_starved(lib):
+    dag = linear_dag()
+    alloc = allocate_lsa(dag, 100, lib)
+    with pytest.raises(InsufficientResourcesError):
+        map_rsm(dag, alloc, acquire_vms(2), lib)
+
+
+def test_sam_full_bundles_get_exclusive_slots(lib):
+    """SAM's gang scheduling: a full bundle owns its slot outright."""
+    dag = linear_dag()
+    alloc = allocate_mba(dag, 100, lib)
+    vms = acquire_vms(alloc.slots + 2)
+    mapping = map_sam(dag, alloc, vms, lib)
+    blob_bundle = alloc.tasks["b"].bundle_size
+    exclusive = 0
+    for slot, counts in mapping.slot_task_counts().items():
+        if counts.get("b", 0) >= blob_bundle:
+            assert len(counts) == 1, "full bundle must not share its slot"
+            exclusive += 1
+    assert exclusive == alloc.tasks["b"].full_bundles
+
+
+def test_sam_mixed_slots_bounded(lib):
+    """§7.4: only partial bundles co-locate, so mixed-task slots are few."""
+    for mk in MICRO_DAGS.values():
+        dag = mk()
+        alloc = allocate_mba(dag, 100, lib)
+        vms = acquire_vms(alloc.slots + 2)
+        mapping = map_sam(dag, alloc, vms, lib)
+        assert mapping.mixed_slots() <= 3
+
+
+def test_sam_uses_fewer_slots_than_dsm_spreads(lib):
+    dag = linear_dag()
+    alloc = allocate_mba(dag, 100, lib)
+    vms = acquire_vms(alloc.slots + 4)
+    sam = map_sam(dag, alloc, vms, lib)
+    dsm = map_dsm(dag, alloc, vms, lib)
+    assert len(sam.used_slots()) <= len(dsm.used_slots())

@@ -1,0 +1,141 @@
+"""Per-arch smoke tests (reduced configs): forward/train/decode on CPU.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import default_env, get_model
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+
+def _batch(cfg, B=2, S=32):
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch, key):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    env = default_env()
+    params = api.init(key)
+    batch = _batch(cfg)
+    logits, aux = api.forward(env, params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_no_nans(arch, key):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    env = default_env()
+    opt = AdamWConfig(lr=1e-3, warmup=1, total_steps=10, schedule=cfg.lr_schedule)
+    state = init_train_state(api, key, opt)
+    step = jax.jit(make_train_step(api, env, opt))
+    state, metrics = step(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params stay finite after the update
+    for leaf in jax.tree.leaves(state.params):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_step(arch, key):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    env = default_env()
+    params = api.init(key)
+    B, S = 2, 16
+    cache = api.init_cache(B, S, env)
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32),
+             "pos": jnp.zeros((B,), jnp.int32)}
+    logits, cache = api.decode_step(env, params, cache, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # a second step at pos 1
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32),
+             "pos": jnp.ones((B,), jnp.int32)}
+    logits2, _ = api.decode_step(env, params, cache, batch)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+def test_prefill_decode_matches_forward(key):
+    """Teacher-forcing consistency: prefill + decode of the next token must
+    agree with the full forward pass (dense family)."""
+    cfg = get_config("minicpm-2b").reduced()
+    api = get_model(cfg)
+    import dataclasses
+    env = dataclasses.replace(default_env(), compute_dtype=jnp.float32)
+    params = api.init(key)
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = api.forward(env, params, {"tokens": tokens})
+    pre_logits, cache = api.prefill(env, params, {"tokens": tokens},
+                                    max_len=S + 4)
+    np.testing.assert_allclose(np.asarray(pre_logits[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    # decode the next position and compare to a forward over S+1 tokens
+    nxt = jnp.argmax(pre_logits[:, 0], axis=-1).astype(jnp.int32)
+    d_logits, _ = api.decode_step(env, params, cache,
+                                  {"tokens": nxt[:, None],
+                                   "pos": jnp.full((B,), S, jnp.int32)})
+    tokens2 = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    full2, _ = api.forward(env, params, {"tokens": tokens2})
+    np.testing.assert_allclose(np.asarray(d_logits[:, 0]),
+                               np.asarray(full2[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_prefill_decode_consistency(key):
+    """Mamba2: prefill state + one decode step == forward over S+1."""
+    cfg = get_config("mamba2-370m").reduced()
+    api = get_model(cfg)
+    import dataclasses
+    env = dataclasses.replace(default_env(), compute_dtype=jnp.float32)
+    params = api.init(key)
+    B, S = 1, 24
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    pre_logits, cache = api.prefill(env, params, {"tokens": tokens})
+    nxt = jnp.argmax(pre_logits[:, 0], -1).astype(jnp.int32)
+    d_logits, _ = api.decode_step(env, params, cache,
+                                  {"tokens": nxt[:, None],
+                                   "pos": jnp.full((B,), S, jnp.int32)})
+    tokens2 = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    full2, _ = api.forward(env, params, {"tokens": tokens2})
+    np.testing.assert_allclose(np.asarray(d_logits[:, 0]),
+                               np.asarray(full2[:, -1]), rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_analytic(key):
+    """init() materializes exactly the analytic param_count() for reduced
+    configs (catches drift between config math and model code)."""
+    import numpy as np
+    for arch in ("minicpm-2b", "qwen2-72b", "moonshot-v1-16b-a3b",
+                 "mamba2-370m", "zamba2-1.2b"):
+        cfg = get_config(arch).reduced()
+        api = get_model(cfg)
+        params = api.init(key)
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        expected = cfg.param_count()
+        assert actual == pytest.approx(expected, rel=0.06), arch

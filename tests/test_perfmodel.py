@@ -1,0 +1,97 @@
+"""Performance models: interpolation, inverse, Alg. 1 builder (paper §5)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (PAPER_MODELS, ModelLibrary, PerfModel, build_perf_model,
+                        latency_slope)
+from repro.core.profiler import (ANALYTIC_PROFILES, AnalyticTrialRunner,
+                                 profile_task, profiled_library)
+
+
+def test_paper_models_fig3_anchors():
+    """Key datapoints quoted in §5.3 / §8.4.1."""
+    m = PAPER_MODELS["parse_xml"]
+    assert m.I(1) == pytest.approx(310.0)       # 310 t/s @ 1 thread
+    assert m.I(7) == pytest.approx(255.0)       # declines to ~255 @ 7
+    assert m.tau_hat == 1                       # best operating point: 1 thread
+
+    m = PAPER_MODELS["pi"]
+    assert m.omega_hat == pytest.approx(110.0)  # modest bump @ 2 threads
+    assert m.tau_hat == 2
+
+    m = PAPER_MODELS["azure_blob"]
+    assert m.I(1) == pytest.approx(2.0)
+    assert m.omega_hat == pytest.approx(30.0)   # bell peak ~30 t/s @ 50
+    assert m.tau_hat == 50
+    assert m.M(1) == pytest.approx(0.239)       # 23.9% per thread (§8.4.1)
+
+    m = PAPER_MODELS["azure_table"]
+    assert m.omega_hat == pytest.approx(60.0)
+    assert m.tau_hat == 60
+
+
+def test_interpolation_between_points():
+    m = PAPER_MODELS["azure_table"]
+    # between tau=2 (5 t/s) and tau=5 (9 t/s)
+    assert 5.0 < m.I(3) < 9.0
+    # paper §8.5.1: interpolation at 3 threads gives ~6 t/s
+    assert m.I(3) == pytest.approx(5 + (9 - 5) / 3, rel=0.01)
+
+
+@hypothesis.given(st.floats(min_value=0.1, max_value=60.0))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_inverse_property(omega):
+    """T is a valid inverse: I(T(w)) >= w for any supportable w."""
+    for kind in ("azure_table", "azure_blob", "parse_xml"):
+        m = PAPER_MODELS[kind]
+        if omega > m.omega_hat:
+            continue
+        q = m.T(omega)
+        assert q is not None
+        assert m.I(q) >= omega - 1e-9
+        if q > 1:  # smallest such q
+            assert m.I(q - 1) < omega
+
+
+def test_t_returns_none_beyond_peak():
+    m = PAPER_MODELS["azure_blob"]
+    assert m.T(m.omega_hat * 2) is None
+
+
+def test_latency_slope_stable_vs_unstable():
+    assert latency_slope([1.0] * 50) == pytest.approx(0.0)
+    assert latency_slope([1.0 + 0.1 * i for i in range(50)]) > 1e-3
+    assert latency_slope([5.0 - 0.01 * i for i in range(50)]) < 0
+
+
+def test_alg1_builder_with_analytic_runner():
+    """Alg. 1 terminates and produces paper-shaped curves."""
+    m = profile_task("azure_table")
+    assert m.points[0].tau == 1
+    # bell curve: capacity grows with threads before the SLA cap
+    assert m.omega_hat > m.I(1) * 3
+    m2 = profile_task("parse_xml")
+    # contention-bound: best operating point at low thread count
+    assert m2.tau_hat <= 2
+
+
+def test_profiled_library_has_all_kinds():
+    lib = profiled_library(["pi", "azure_table"])
+    assert "pi" in lib and "azure_table" in lib and "source" in lib
+
+
+def test_serialization_roundtrip():
+    lib = ModelLibrary(PAPER_MODELS)
+    lib2 = ModelLibrary.from_json(lib.to_json())
+    for kind in lib.kinds():
+        m1, m2 = lib[kind], lib2[kind]
+        assert m1.static == m2.static
+        for q in (1, 2, 5):
+            assert m1.I(q) == pytest.approx(m2.I(q))
+
+
+def test_static_models():
+    assert PAPER_MODELS["source"].static
+    assert PAPER_MODELS["sink"].static

@@ -1,0 +1,67 @@
+"""Additional property-based invariants (hypothesis) on the scheduler
+stack: routing conservation, predictor monotonicity, replan stability."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import (MICRO_DAGS, RoutingPolicy, VM, acquire_vms,
+                        allocate_mba, linear_dag, map_sam, paper_library,
+                        plan, predict_max_rate)
+from repro.core.predictor import slot_groups
+from repro.core.routing import group_rates
+
+
+@hypothesis.given(rate=st.floats(min_value=1.0, max_value=500.0),
+                  policy=st.sampled_from(list(RoutingPolicy)))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_routing_conserves_rate(rate, policy):
+    """Routing never creates or destroys tuples: group rates sum to the
+    task rate under both policies."""
+    lib = paper_library()
+    dag = linear_dag()
+    alloc = allocate_mba(dag, 100, lib)
+    vms = acquire_vms(alloc.slots + 2)
+    mapping = map_sam(dag, alloc, vms, lib)
+    groups = slot_groups(mapping, alloc)
+    for task, g in groups.items():
+        if not g:
+            continue
+        kind = alloc.tasks[task].kind
+        dist = group_rates(task, kind, rate, g, lib, policy)
+        assert sum(dist.values()) == pytest.approx(rate, rel=1e-9)
+        assert all(v >= 0 for v in dist.values())
+
+
+@hypothesis.given(omega=st.floats(min_value=20, max_value=150))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_predicted_rate_monotone_in_cluster_size(omega):
+    """Adding slots to the cluster never lowers the predicted rate."""
+    lib = paper_library()
+    dag = linear_dag()
+    alloc = allocate_mba(dag, omega, lib)
+    small = acquire_vms(alloc.slots + 2)
+    big = acquire_vms(alloc.slots + 6)
+    m_small = map_sam(dag, alloc, small, lib)
+    m_big = map_sam(dag, alloc, big, lib)
+    r_small = predict_max_rate(dag, alloc, m_small, lib,
+                               RoutingPolicy.SLOT_AWARE)
+    r_big = predict_max_rate(dag, alloc, m_big, lib, RoutingPolicy.SLOT_AWARE)
+    # same threads, more room -> never worse under capacity-weighted routing
+    assert r_big >= r_small - 1e-6
+
+
+@hypothesis.given(dag_name=st.sampled_from(sorted(MICRO_DAGS)),
+                  kill=st.integers(min_value=0, max_value=1))
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_replan_preserves_thread_counts(dag_name, kill):
+    """Failure replanning never changes the model-driven allocation."""
+    from repro.core import replan_on_failure
+    lib = paper_library()
+    dag = MICRO_DAGS[dag_name]()
+    s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+    if kill >= len(s.vms):
+        return
+    s2 = replan_on_failure(s, lib, [s.vms[kill].id])
+    assert s2.allocation.total_threads == s.allocation.total_threads
+    assert len(s2.mapping.assignment) == s.allocation.total_threads

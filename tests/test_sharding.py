@@ -1,0 +1,102 @@
+"""Sharding rules: specs always divide dims; canonical layouts."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.distributed.sharding import (batch_spec, cache_spec, param_spec,
+                                        tree_param_specs)
+from repro.models import get_model
+from repro.models.api import cache_specs, input_specs
+from repro.models.common import Env
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _env(multi=False):
+    mesh = _mesh(multi)
+    batch = tuple(a for a in mesh.axis_names if a != "model")
+    return Env(mesh=mesh, batch_axes=batch, tp_axis="model")
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_always_divide(arch, multi):
+    """Every sharded parameter dimension is divisible by its axis group —
+    the whole-matrix invariant that makes the production mesh lower."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    env = _env(multi)
+    state = jax.eval_shape(
+        lambda k: init_train_state(api, k, AdamWConfig()), jax.random.PRNGKey(0))
+    specs = tree_param_specs(env, state)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs,
+                                                   is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(state)
+    spec_leaves = [s for _, s in flat]
+    assert len(spec_leaves) == len(leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            size = _axis_size(env.mesh, entry)
+            assert dim % size == 0, (arch, leaf.shape, spec)
+
+
+def test_param_specs_shard_the_big_matrices():
+    cfg = get_config("qwen2-72b")
+    api = get_model(cfg)
+    env = _env()
+    params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    specs = tree_param_specs(env, params)
+    # PartitionSpec normalizes 1-tuples to bare names; compare via P
+    assert specs["blocks"]["attn"]["wq"] == P(None, ("data",), "model")
+    assert specs["embed"] == P("model", ("data",))
+
+
+@pytest.mark.parametrize("shape_name", sorted(SHAPES))
+def test_batch_specs_divide(shape_name):
+    env = _env(True)
+    cfg = get_config("qwen2-72b")
+    batch = input_specs(cfg, SHAPES[shape_name])
+    for name, leaf in batch.items():
+        spec = batch_spec(env, name, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            assert dim % _axis_size(env.mesh, entry) == 0
+
+
+def test_cache_spec_gqa_kv_fallback_to_seq():
+    """K=8 kv heads under tp=16: the cache shards its sequence dim."""
+    env = _env()
+    spec = cache_spec(env, "k", (64, 128, 32768, 8, 128))
+    assert spec == P(None, ("data",), "model", None, None)
+
+
+def test_cache_spec_mha_shards_heads():
+    env = _env()
+    spec = cache_spec(env, "k", (38, 128, 32768, 32, 64))
+    assert spec == P(None, ("data",), None, "model", None)
+
+
+def test_cache_spec_long_context_batch1():
+    """long_500k: batch 1 -> KV sequence over the data axes."""
+    env = _env()
+    spec = cache_spec(env, "k", (38, 1, 524288, 32, 64))
+    assert spec == P(None, None, ("data",), "model", None)

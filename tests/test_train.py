@@ -1,0 +1,161 @@
+"""Optimizer, schedules, train loop convergence, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.models import default_env, get_model
+from repro.train import (AdamWConfig, Checkpointer, adamw_init, adamw_update,
+                         cosine_schedule, init_train_state, make_train_step,
+                         wsd_schedule)
+
+
+def test_wsd_schedule_shape():
+    lr = wsd_schedule(1.0, warmup=10, total=100, decay_frac=0.2)
+    assert float(lr(jnp.array(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.array(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.array(50))) == pytest.approx(1.0)     # stable plateau
+    assert float(lr(jnp.array(99))) < 0.1                      # sharp decay
+
+
+def test_cosine_schedule_monotone_decay():
+    lr = cosine_schedule(1.0, warmup=5, total=100)
+    vals = [float(lr(jnp.array(s))) for s in (5, 30, 60, 99)]
+    assert vals == sorted(vals, reverse=True)
+
+
+def test_adamw_converges_quadratic():
+    """AdamW drives a toy quadratic to its minimum."""
+    cfg = AdamWConfig(lr=0.1, warmup=0, total_steps=200, weight_decay=0.0,
+                      clip_norm=100.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    target = jnp.array([1.0, 1.0])
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_quantized_nu_tracks_exact():
+    """int8 block-quantized second moment stays usable: bounded drift from
+    exact AdamW on a noisy trajectory AND equal convergence on a quadratic
+    (the int8 resolution is ~1/127 relative on sqrt(nu), so per-step update
+    error is <1%; drift over 20 steps stays bounded, not tight)."""
+    exact_cfg = AdamWConfig(lr=0.05, warmup=0, total_steps=100,
+                            weight_decay=0.0)
+    quant_cfg = AdamWConfig(lr=0.05, warmup=0, total_steps=100,
+                            weight_decay=0.0, quantize_nu=True, quant_block=64)
+    params_e = {"w": jnp.linspace(-1, 1, 256)}
+    params_q = {"w": jnp.linspace(-1, 1, 256)}
+    se, sq = adamw_init(params_e, exact_cfg), adamw_init(params_q, quant_cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        g = {"w": jnp.asarray(rng.normal(size=256), jnp.float32)}
+        params_e, se, _ = adamw_update(g, se, params_e, exact_cfg)
+        params_q, sq, _ = adamw_update(g, sq, params_q, quant_cfg)
+    diff = float(jnp.max(jnp.abs(params_e["w"] - params_q["w"])))
+    assert diff < 0.2
+
+    # outcome check: quantized AdamW converges on the quadratic too
+    cfg = AdamWConfig(lr=0.1, warmup=0, total_steps=200, weight_decay=0.0,
+                      clip_norm=100.0, quantize_nu=True, quant_block=64,
+                      mu_dtype=jnp.bfloat16)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    target = jnp.array([1.0, 1.0])
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.1)
+
+
+def test_grad_clipping_caps_norm():
+    cfg = AdamWConfig(lr=0.0, warmup=0, total_steps=10, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    _, _, metrics = adamw_update({"w": jnp.full(4, 100.0)}, state, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_training_reduces_loss(key):
+    """A few hundred micro-steps on a tiny model reduce loss measurably."""
+    cfg = get_config("minicpm-2b").reduced()
+    api = get_model(cfg)
+    env = default_env()
+    opt = AdamWConfig(lr=3e-3, warmup=5, total_steps=100, schedule="wsd")
+    state = init_train_state(api, key, opt)
+    step = jax.jit(make_train_step(api, env, opt))
+    src = SyntheticTokens(32, 8, cfg.vocab_size, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in src.next().items()}  # memorize one batch
+    losses = []
+    for _ in range(40):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::8]
+
+
+def test_microbatched_grads_match_full(key):
+    cfg = get_config("minicpm-2b").reduced()
+    api = get_model(cfg)
+    import dataclasses
+    env = dataclasses.replace(default_env(), compute_dtype=jnp.float32)
+    opt = AdamWConfig(lr=1e-3, warmup=0, total_steps=10)
+    state = init_train_state(api, key, opt)
+    src = SyntheticTokens(16, 4, cfg.vocab_size, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in src.next().items()}
+    s1, m1 = jax.jit(make_train_step(api, env, opt, microbatches=1))(state, batch)
+    s2, m2 = jax.jit(make_train_step(api, env, opt, microbatches=2))(state, batch)
+    # losses logged differ (mean over microbatches) but params should agree
+    # closely since grads average linearly
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-3, atol=5e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    cfg = get_config("mamba2-370m").reduced()
+    api = get_model(cfg)
+    opt = AdamWConfig()
+    state = init_train_state(api, key, opt)
+    ckpt = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    ckpt.save(3, state, extra={"note": "hello"})
+    restored, step, extra = ckpt.restore(state)
+    assert step == 3 and extra["note"] == "hello"
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path, key):
+    cfg = get_config("mamba2-370m").reduced()
+    api = get_model(cfg)
+    state = init_train_state(api, key, AdamWConfig())
+    ckpt = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, state)
+    assert ckpt.all_steps() == [3, 4]
+    assert ckpt.latest_step() == 4
+
+
+def test_checkpoint_elastic_restore(tmp_path, key):
+    """Restore with a sharding_fn (the elastic re-mesh path)."""
+    cfg = get_config("mamba2-370m").reduced()
+    api = get_model(cfg)
+    state = init_train_state(api, key, AdamWConfig())
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    ckpt.save(1, state)
+    device = jax.devices()[0]
+    from jax.sharding import SingleDeviceSharding
+    restored, _, _ = ckpt.restore(
+        state, sharding_fn=lambda key_, leaf: SingleDeviceSharding(device))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
