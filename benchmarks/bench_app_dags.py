@@ -1,4 +1,9 @@
-"""Fig. 8 — application-DAG resource benefits (Traffic / Finance / Grid)."""
+"""Fig. 8 — application-DAG resource benefits (Traffic / Finance / Grid).
+
+Actual stable rates come from the sweep engine (`simulate_sweep` probe
+batches inside `max_stable_rate`) — one vectorized time loop per bracket
+refinement instead of a simulation per candidate rate.
+"""
 
 from __future__ import annotations
 

@@ -2,7 +2,8 @@
 
 LSA+RSM vs MBA+SAM at 50/100/200 t/s on Linear / Diamond / Star: estimated
 slots (yellow bars), mapper's extra slots (green bars), and the actual
-stable rate from the simulator (blue dots).
+stable rate from the simulator (blue dots), found via vectorized
+`simulate_sweep` probe batches rather than one run per candidate rate.
 """
 
 from __future__ import annotations

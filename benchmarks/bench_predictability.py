@@ -7,6 +7,11 @@ For the 5 scheduler pairs (LSA+{DSM,RSM}, MBA+{DSM,RSM,SAM}):
 * per-VM CPU%/mem%: predicted vs actual (simulated) at the actual rate
 
 Reports the R^2 correlations of Figs. 9-12.
+
+Planned rates come from the vectorized bisection planner (one array pass
+over the rate grid instead of the +10 t/s scan) and actual rates from the
+sweep simulator (`simulate_sweep` probe batches inside `max_stable_rate`),
+so the whole protocol runs without per-rate scalar loops.
 """
 
 from __future__ import annotations

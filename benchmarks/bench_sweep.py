@@ -1,0 +1,96 @@
+"""Rate-sweep engine — vectorized planning + simulation vs scalar baselines.
+
+Two comparisons on the seed DAGs:
+
+* ``simulate_sweep(omegas)``: one flat-array pass over a 50-point rate grid
+  vs 50 per-rate ``DataflowSimulator.run`` calls (same engine, K=1), checking
+  the results agree exactly.
+* ``max_planned_rate``: vectorized-slots + bisection vs the literal §8.5
+  +10 t/s scan, checking the planned rates agree on every (DAG, scheduler
+  pair) and counting scalar allocator/mapper invocations saved.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ALL_DAGS, MICRO_DAGS, DataflowSimulator,
+                        paper_library, plan)
+from repro.core.scheduler import max_planned_rate
+
+from .common import Table
+
+PAIRS = (("lsa", "dsm"), ("lsa", "rsm"),
+         ("mba", "dsm"), ("mba", "rsm"), ("mba", "sam"))
+BUDGET = 20
+
+
+def run(*, n_rates: int = 50, sim_duration: float = 12.0) -> dict:
+    lib = paper_library()
+
+    # -- sweep simulation vs per-rate runs -----------------------------------
+    tbl = Table(["dag", "rates", "per-rate_s", "sweep_s", "speedup", "agree"])
+    speedups = []
+    for name, mk in MICRO_DAGS.items():
+        dag = mk()
+        s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+        sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+        omegas = np.linspace(10, 150, n_rates)
+        t0 = time.perf_counter()
+        per_rate = [sim.run(float(w), duration=sim_duration, dt=0.1)
+                    for w in omegas]
+        t_seq = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        swept = sim.simulate_sweep(omegas, duration=sim_duration, dt=0.1)
+        t_sweep = time.perf_counter() - t0
+        agree = all(a.stable == b.stable
+                    and abs(a.latency_slope - b.latency_slope) < 1e-9
+                    for a, b in zip(per_rate, swept))
+        speedups.append(t_seq / t_sweep)
+        tbl.add(name, n_rates, round(t_seq, 3), round(t_sweep, 3),
+                round(t_seq / t_sweep, 1), agree)
+    tbl.show(f"simulate_sweep vs per-rate run ({n_rates}-point grid)")
+
+    # -- bisection planning vs the §8.5 linear scan --------------------------
+    tbl2 = Table(["dag", "pair", "rate", "scan_allocs", "bisect_allocs"])
+    scan_calls = bisect_calls = 0
+    t_scan = t_bisect = 0.0
+    all_match = True
+    for name, mk in ALL_DAGS.items():
+        for alloc_name, map_name in PAIRS:
+            dag = mk()
+            s1, s2 = {}, {}
+            t0 = time.perf_counter()
+            r_scan = max_planned_rate(dag, lib, allocator=alloc_name,
+                                      mapper=map_name, budget_slots=BUDGET,
+                                      method="scan", stats=s1)
+            t_scan += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            r_bis = max_planned_rate(dag, lib, allocator=alloc_name,
+                                     mapper=map_name, budget_slots=BUDGET,
+                                     method="bisect", stats=s2)
+            t_bisect += time.perf_counter() - t0
+            all_match &= (r_scan == r_bis)
+            scan_calls += s1["allocator_calls"]
+            bisect_calls += s2["allocator_calls"]
+            tbl2.add(name, f"{alloc_name}+{map_name}", round(r_bis, 0),
+                     s1["allocator_calls"], s2["allocator_calls"])
+    tbl2.show("max_planned_rate: scan vs vectorized bisection")
+
+    mean_speedup = sum(speedups) / len(speedups)
+    call_ratio = scan_calls / max(1, bisect_calls)
+    print(f"\nsweep speedup: mean {mean_speedup:.1f}x over "
+          f"{len(speedups)} DAGs (target >= 3x)")
+    print(f"planned rates identical: {all_match}")
+    print(f"allocator calls: scan {scan_calls} vs bisect {bisect_calls} "
+          f"({call_ratio:.1f}x fewer; target >= 5x); "
+          f"wall {t_scan:.2f}s vs {t_bisect:.2f}s")
+    return {"sweep_speedup": round(mean_speedup, 1),
+            "rates_match": all_match,
+            "allocator_call_ratio": round(call_ratio, 1)}
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,7 @@ import sys
 
 from . import (bench_app_dags, bench_latency, bench_micro_dags,
                bench_optimized, bench_perfmodels, bench_predictability,
-               bench_roofline, bench_serving)
+               bench_roofline, bench_serving, bench_sweep)
 from .common import timed
 
 BENCHES = [
@@ -20,6 +20,7 @@ BENCHES = [
     ("fig8_app_dags", bench_app_dags.run),
     ("fig9_12_predictability", bench_predictability.run),
     ("fig13_latency", bench_latency.run),
+    ("sweep_engine", bench_sweep.run),
     ("serving_planner", bench_serving.run),
     ("roofline_table", bench_roofline.run),
     ("perf_optimized", bench_optimized.run),

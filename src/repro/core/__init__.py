@@ -18,6 +18,8 @@ from .perfmodel import (ModelLibrary, ModelPoint, PAPER_MODELS, PerfModel,
                         TrialResult, build_perf_model, latency_slope,
                         paper_library)
 from .allocation import ALLOCATORS, Allocation, TaskAllocation, allocate_lsa, allocate_mba
+from .batch import (BatchAllocation, batch_allocate, batch_feasible,
+                    batch_slots)
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
                       Mapping, SlotId, Thread, VM, acquire_vms, map_dsm,
                       map_rsm, map_sam)

@@ -22,11 +22,14 @@ thread values").
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import json
 import math
-from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+ArrayLike = Union[float, int, Sequence[float], np.ndarray]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,41 +61,55 @@ class PerfModel:
             raise ValueError("duplicate thread counts in model")
         self.kind = kind
         self.points: List[ModelPoint] = pts
-        self._taus = taus
         self.static = static
+        # Vectorized interpolation tables (jnp.interp-style): a (0, 0) anchor
+        # reproduces the below-first-point linear ramp, and np.interp's right
+        # clamp reproduces the flat extension beyond the last measured count.
+        self._xp = np.array([0.0] + [float(t) for t in taus])
+        self._fp = {
+            "rate": np.array([0.0] + [p.rate for p in pts]),
+            "cpu": np.array([0.0] + [p.cpu for p in pts]),
+            "mem": np.array([0.0] + [p.mem for p in pts]),
+        }
+        # Integer-grid peak rates 1..tau_max and their running max, for the
+        # vectorized inverse T (I is piecewise linear between integer taus,
+        # so the integer grid is exact).
+        self._int_rates = np.interp(np.arange(1, taus[-1] + 1, dtype=float),
+                                    self._xp, self._fp["rate"])
+        self._int_cummax = np.maximum.accumulate(self._int_rates)
 
     # -- interpolation helpers ---------------------------------------------
-    def _interp(self, q: float, field: str) -> float:
-        pts = self.points
-        if q <= pts[0].tau:
-            # below the first measured count: scale linearly from zero
-            # (0 threads do no work and use no incremental resources).
-            return getattr(pts[0], field) * (q / pts[0].tau)
-        if q >= pts[-1].tau:
-            # beyond the last measured count Alg. 1 terminated because the
-            # rate had flattened or dropped; extend flat (conservative).
-            return getattr(pts[-1], field)
-        j = bisect.bisect_right(self._taus, q)
-        lo, hi = pts[j - 1], pts[j]
-        f = (q - lo.tau) / (hi.tau - lo.tau)
-        return getattr(lo, field) * (1 - f) + getattr(hi, field) * f
+    def _eval(self, q: ArrayLike, field: str):
+        """Scalar or array evaluation of one profile field at ``q`` threads.
+
+        Piecewise linear over the measured counts with a (0, 0) anchor below
+        the first point (0 threads do no work and use no incremental
+        resources) and a flat extension beyond the last (where Alg. 1
+        terminated because the rate had flattened or dropped).  Scalars and
+        arrays share the same ``np.interp`` tables, so batch evaluation is
+        bit-identical to the scalar path.
+        """
+        if np.ndim(q) == 0:
+            if q <= 0:
+                return 0.0
+            return float(np.interp(float(q), self._xp, self._fp[field]))
+        q = np.asarray(q, dtype=float)
+        return np.interp(np.clip(q, 0.0, None), self._xp, self._fp[field])
 
     # -- paper-named accessors ----------------------------------------------
-    def I(self, q: float) -> float:  # noqa: E743  (paper notation)
-        """Peak stable input rate with ``q`` threads on one slot."""
-        if q <= 0:
-            return 0.0
-        return self._interp(q, "rate")
+    def I(self, q: ArrayLike):  # noqa: E743  (paper notation)
+        """Peak stable input rate with ``q`` threads on one slot.
 
-    def C(self, q: float) -> float:
-        if q <= 0:
-            return 0.0
-        return self._interp(q, "cpu")
+        Accepts a scalar or an array of thread counts; array inputs are
+        evaluated in one vectorized pass (the batch planning engine's path).
+        """
+        return self._eval(q, "rate")
 
-    def M(self, q: float) -> float:
-        if q <= 0:
-            return 0.0
-        return self._interp(q, "mem")
+    def C(self, q: ArrayLike):
+        return self._eval(q, "cpu")
+
+    def M(self, q: ArrayLike):
+        return self._eval(q, "mem")
 
     def T(self, omega: float) -> Optional[int]:
         """Smallest integer thread count whose peak rate covers ``omega``,
@@ -100,14 +117,24 @@ class PerfModel:
         bundles at ``omega_hat``)."""
         if omega <= 0:
             return 0
-        best: Optional[int] = None
-        # Integer search up to the last measured tau; I() is piecewise linear
-        # so scanning integer counts is exact and cheap (taus are small).
-        for q in range(1, self.points[-1].tau + 1):
-            if self.I(q) >= omega - 1e-12:
-                best = q
-                break
-        return best
+        t = int(self.T_many(omega))
+        return None if t < 0 else t
+
+    def T_many(self, omegas: ArrayLike):
+        """Vectorized inverse of I: smallest integer thread count supporting
+        each rate, ``-1`` where even the best measured count falls short
+        (the scalar ``T``'s None), ``0`` for non-positive rates.
+
+        I is piecewise linear between integer thread counts, so the first
+        integer ``q`` with ``I(q) >= omega`` equals the first index where the
+        running max of the integer-grid rates crosses ``omega`` — a single
+        ``searchsorted`` on the (non-decreasing) running max.
+        """
+        omegas = np.asarray(omegas, dtype=float)
+        idx = np.searchsorted(self._int_cummax, omegas - 1e-12, side="left")
+        out = idx + 1  # grid index 0 is tau=1
+        out = np.where(idx >= len(self._int_cummax), -1, out)
+        return np.where(omegas <= 0, 0, out)
 
     @property
     def omega_bar(self) -> float:

@@ -17,8 +17,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Tuple
 
+import numpy as np
+
 from .allocation import Allocation
-from .dag import Dataflow
+from .dag import Dataflow, Routing
 from .mapping import Mapping as ThreadMapping, SlotId, VM
 from .perfmodel import ModelLibrary
 from .routing import RoutingPolicy, group_rates
@@ -41,6 +43,130 @@ def slot_groups(mapping: ThreadMapping, alloc: Allocation
         for task, q in counts.items():
             out[task][slot] = q
     return out
+
+
+@dataclasses.dataclass
+class GroupIndex:
+    """Flat-array view of a schedule's (task, slot) thread groups.
+
+    Everything rate-*independent* about a mapping is precomputed once here:
+    group membership, per-group thread counts and model capacities, routing
+    fractions (thread- or capacity-proportional — both are independent of the
+    operating rate), slot segmentation, and the DAG's linear rate
+    coefficients.  The batch predictor and the sweep simulator then evaluate
+    any vector of input rates as pure array passes over this index.
+
+    Shapes: ``T`` tasks (DAG topo order), ``G`` groups, ``S`` slots.
+    """
+
+    tasks: List[str]                 # (T,) topo order
+    task_of: Dict[str, int]
+    betas: np.ndarray                # (T,) per-task rate per unit DAG rate
+    task_start: np.ndarray           # (T+1,) group-slice offsets per task
+    g_task: np.ndarray               # (G,) owning task row per group
+    g_slot: np.ndarray               # (G,) slot index per group
+    g_threads: np.ndarray            # (G,) thread count per group
+    g_cap: np.ndarray                # (G,) model peak rate I_t(q)
+    g_cpu: np.ndarray                # (G,) model CPU% C_t(q)
+    g_mem: np.ndarray                # (G,) model memory% M_t(q)
+    g_frac: np.ndarray               # (G,) routing fraction within the task
+    slots: List[SlotId]              # (S,)
+    in_edges: List[List[Tuple[int, float]]]  # per task: (src row, multiplier)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.g_task)
+
+    def task_slice(self, row: int) -> slice:
+        return slice(self.task_start[row], self.task_start[row + 1])
+
+
+def build_group_index(dag: Dataflow, alloc: Allocation,
+                      mapping: ThreadMapping, models: ModelLibrary,
+                      policy: RoutingPolicy = RoutingPolicy.SHUFFLE
+                      ) -> GroupIndex:
+    """Flatten ``slot_groups`` into contiguous arrays, tasks in topo order."""
+    groups = slot_groups(mapping, alloc)
+    order = [t.name for t in dag.topo_order()]
+    task_of = {name: i for i, name in enumerate(order)}
+    betas_map = dag.get_rates(1.0)
+    slots: List[SlotId] = []
+    slot_of: Dict[SlotId, int] = {}
+    task_start = [0]
+    g_task: List[int] = []
+    g_slot: List[int] = []
+    g_threads: List[int] = []
+    g_cap: List[float] = []
+    g_cpu: List[float] = []
+    g_mem: List[float] = []
+    g_frac: List[float] = []
+    for row, name in enumerate(order):
+        g = groups.get(name, {})
+        kind = alloc.tasks[name].kind
+        model = models[kind]
+        if g:
+            # unit task rate: fractions are rate-independent under both
+            # policies (thread- resp. capacity-proportional)
+            dist = group_rates(name, kind, 1.0, g, models, policy)
+        for slot, q in g.items():
+            if slot not in slot_of:
+                slot_of[slot] = len(slots)
+                slots.append(slot)
+            g_task.append(row)
+            g_slot.append(slot_of[slot])
+            g_threads.append(q)
+            g_cap.append(model.I(q))
+            g_cpu.append(model.C(q))
+            g_mem.append(model.M(q))
+            g_frac.append(dist[slot])
+        task_start.append(len(g_task))
+    in_edges: List[List[Tuple[int, float]]] = []
+    for name in order:
+        meta = []
+        for e in dag.in_edges(name):
+            mult = e.selectivity
+            outs = len(dag.out_edges(e.src))
+            if dag.routing[e.src] is Routing.SPLIT and outs:
+                mult /= outs
+            meta.append((task_of[e.src], mult))
+        in_edges.append(meta)
+    return GroupIndex(
+        tasks=order, task_of=task_of,
+        betas=np.array([betas_map[n] for n in order]),
+        task_start=np.array(task_start),
+        g_task=np.array(g_task, dtype=int), g_slot=np.array(g_slot, dtype=int),
+        g_threads=np.array(g_threads, dtype=int),
+        g_cap=np.array(g_cap), g_cpu=np.array(g_cpu), g_mem=np.array(g_mem),
+        g_frac=np.array(g_frac), slots=slots, in_edges=in_edges)
+
+
+def effective_capacity_matrix(gi: GroupIndex, omegas: np.ndarray,
+                              *, cpu_penalty: bool = CPU_OVERSUB_PENALTY,
+                              iters: int = 4) -> np.ndarray:
+    """Per-(group, rate) sustainable rate, vectorized over a rate sweep.
+
+    The array form of :func:`effective_capacities`: base capacity is the
+    model's ``I_t(q)`` per group; with ``cpu_penalty`` the §8.4.2 throttle is
+    found by the same damped fixed point, but evaluated for every rate in
+    ``omegas`` at once (shape ``(G, K)``).
+    """
+    omegas = np.asarray(omegas, dtype=float)
+    caps = np.repeat(gi.g_cap[:, None], len(omegas), axis=1)
+    if not cpu_penalty or gi.n_groups == 0:
+        return caps
+    base = gi.g_cap[:, None]
+    arr = gi.g_frac[:, None] * gi.betas[gi.g_task][:, None] * omegas[None, :]
+    n_slots = len(gi.slots)
+    for _ in range(iters):
+        served = np.minimum(arr, caps)
+        frac_used = np.where(base > 0, np.minimum(1.0, served / np.where(
+            base > 0, base, 1.0)), 1.0)
+        used = gi.g_cpu[:, None] * frac_used
+        slot_cpu = np.zeros((n_slots, len(omegas)))
+        np.add.at(slot_cpu, gi.g_slot, used)
+        over = slot_cpu[gi.g_slot]
+        caps = np.where(over > 1.0 + 1e-9, base / over, base)
+    return caps
 
 
 def effective_capacities(dag: Dataflow, alloc: Allocation,

@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .allocation import ALLOCATORS, Allocation
 from .dag import Dataflow
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
@@ -145,21 +147,78 @@ def replan_on_failure(schedule: Schedule, models: ModelLibrary,
 def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
                      mapper: str, budget_slots: int,
                      vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
-                     step: float = 10.0, max_rate: float = 1e5) -> float:
+                     step: float = 10.0, max_rate: float = 1e5,
+                     method: str = "bisect",
+                     stats: Optional[Dict[str, int]] = None) -> float:
     """Highest rate whose plan fits ``budget_slots`` (the §8.5 protocol:
     'adding incremental input rates of 10 t/s until the resources required is
-    just within or equal to' the fixed cluster)."""
-    omega, best = step, 0.0
-    while omega <= max_rate:
+    just within or equal to' the fixed cluster).
+
+    ``method="bisect"`` (default) evaluates the slot estimate for the WHOLE
+    rate grid in one vectorized array pass (:mod:`repro.core.batch`) and then
+    bisects the remaining mapper-feasibility oracle — O(log K) allocator +
+    mapper calls instead of the paper protocol's O(K) trial-and-error scan.
+    ``method="scan"`` keeps the literal +``step`` protocol for comparison.
+    The scan's stop-at-first-failure semantics are preserved exactly for the
+    slot estimate (prefix cut on the vectorized mask); for the residual
+    mapper check, bisection assumes feasibility is prefix-monotone on the
+    grid — true for the seed models/DAGs (tested exhaustively in
+    tests/test_batch.py), though a pathologically fragmented mapper could
+    in principle be feasible at a high rate after failing at a lower one,
+    where the scan would stop earlier.
+
+    ``stats`` (optional) is filled with ``allocator_calls`` / ``mapper_calls``
+    / ``batch_passes`` for instrumentation.
+    """
+    from .batch import batch_slots, bisect_largest_true, prefix_feasible_count
+
+    counters = stats if stats is not None else {}
+    counters.setdefault("allocator_calls", 0)
+    counters.setdefault("mapper_calls", 0)
+    counters.setdefault("batch_passes", 0)
+    vms = acquire_vms(budget_slots, vm_sizes)
+
+    def plan_fits(omega: float) -> bool:
+        counters["allocator_calls"] += 1
         alloc = ALLOCATORS[allocator](dag, omega, models)
         if alloc.slots > budget_slots:
-            break
-        # also require the mapper to succeed on the fixed budget
-        vms = acquire_vms(budget_slots, vm_sizes)
+            return False
+        counters["mapper_calls"] += 1
         try:
             MAPPERS[mapper](dag, alloc, vms, models)
         except InsufficientResourcesError:
-            break
-        best = omega
-        omega += step
-    return best
+            return False
+        return True
+
+    if method == "scan":
+        omega, best = step, 0.0
+        while omega <= max_rate:
+            if not plan_fits(omega):
+                break
+            best = omega
+            omega += step
+        return best
+    if method != "bisect":
+        raise ValueError(f"unknown max_planned_rate method {method!r}")
+
+    grid = step * np.arange(1, int(max_rate / step) + 1)
+    counters["batch_passes"] += 1
+    rho_ok = batch_slots(dag, grid, models, allocator) <= budget_slots
+    # The scan stops at the FIRST rate that does not fit: only the leading
+    # all-feasible prefix is eligible, even if a later rate fits again.
+    n = prefix_feasible_count(rho_ok)
+    if n == 0:
+        return 0.0
+
+    def mapper_fits(k: int) -> bool:
+        counters["allocator_calls"] += 1
+        alloc = ALLOCATORS[allocator](dag, float(grid[k]), models)
+        counters["mapper_calls"] += 1
+        try:
+            MAPPERS[mapper](dag, alloc, vms, models)
+        except InsufficientResourcesError:
+            return False
+        return True
+
+    best_k = bisect_largest_true(mapper_fits, n)
+    return float(grid[best_k]) if best_k >= 0 else 0.0

@@ -10,21 +10,30 @@ The simulator is what the benchmark harness calls the *actual* behaviour.  It
 deliberately contains effects the schedule planner does NOT model (routing
 skew, oversubscription throttling, network hops), which is what produces the
 planned-vs-actual gaps reported in Figs. 7–13.
+
+Internally the engine is fully vectorized: per-group queues and capacities
+live in flat numpy arrays keyed by a precomputed :class:`GroupIndex`, with the
+*rate sweep* as a trailing array axis.  ``simulate_sweep(omegas)`` runs a
+whole vector of input rates through one time loop; ``run(omega)`` is the
+single-column special case, and ``max_stable_rate`` refines the stability
+boundary with multi-point sweep passes instead of one-rate-at-a-time
+bisection.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
-from collections import defaultdict
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
 
 from .allocation import Allocation
 from .dag import Dataflow
 from .mapping import Mapping as ThreadMapping, SlotId
 from .perfmodel import ModelLibrary, latency_slope
-from .predictor import effective_capacities, slot_groups
+from .predictor import (build_group_index, effective_capacities,
+                        effective_capacity_matrix, slot_groups)
 from .routing import RoutingPolicy, group_rates
 
 #: Network hop latencies (s): same slot / same VM / cross VM.
@@ -60,28 +69,11 @@ class DataflowSimulator:
         self.cpu_penalty = cpu_penalty
         self.groups = slot_groups(mapping, alloc)
         self.rng = random.Random(seed)
-        self._topo = [t for t in dag.topo_order()]
-
-    def _caps_at(self, omega: float):
-        """Rate-dependent effective capacities (§8.4.2 throttle)."""
-        return effective_capacities(self.dag, self.alloc, self.mapping,
-                                    self.models, cpu_penalty=self.cpu_penalty,
-                                    omega=omega, policy=self.policy)
+        self.gi = build_group_index(dag, alloc, mapping, models, policy)
+        self._hops = self._edge_hop_latencies()
+        self._sink_rows = [self.gi.task_of[t.name] for t in dag.sinks()]
 
     # -- helpers -------------------------------------------------------------
-    def _routing_fractions(self, omega: float) -> Dict[str, Dict[SlotId, float]]:
-        rates = self.dag.get_rates(omega)
-        out: Dict[str, Dict[SlotId, float]] = {}
-        for task, g in self.groups.items():
-            kind = self.alloc.tasks[task].kind
-            r = rates[task]
-            if r <= 0 or not g:
-                out[task] = {s: 0.0 for s in g}
-                continue
-            dist = group_rates(task, kind, r, g, self.models, self.policy)
-            out[task] = {s: dist[s] / r for s in g}
-        return out
-
     def _hop_latency(self, src_task: str, dst_task: str) -> float:
         """Expected network hop latency between two tasks' thread groups."""
         src_slots = list(self.groups.get(src_task, {}))
@@ -100,115 +92,136 @@ class DataflowSimulator:
                 n += 1
         return total / n
 
+    def _edge_hop_latencies(self) -> List[List[float]]:
+        """Per task row, hop latency of each in-edge (rate-independent)."""
+        gi = self.gi
+        hops: List[List[float]] = []
+        for row, name in enumerate(gi.tasks):
+            hops.append([self._hop_latency(gi.tasks[src], name)
+                         for src, _ in gi.in_edges[row]])
+        return hops
+
     # -- main entry ------------------------------------------------------------
     def run(self, omega: float, *, duration: float = 60.0, dt: float = 0.05,
             warmup: float = 5.0, latency_sample_every: float = 0.25) -> SimResult:
-        frac = self._routing_fractions(omega)
-        rates = self.dag.get_rates(omega)
-        self.caps = self._caps_at(omega)
-        queues: Dict[Tuple[str, SlotId], float] = {
-            (t, s): 0.0 for t, g in self.groups.items() for s in g}
-        busy_acc: Dict[SlotId, float] = defaultdict(float)
-        latency_t: List[float] = []
-        latency_v: List[float] = []
+        return self.simulate_sweep(
+            [omega], duration=duration, dt=dt, warmup=warmup,
+            latency_sample_every=latency_sample_every)[0]
 
-        # Pre-compute per-group arrival and service rates (fluid model:
-        # arrivals at a group are the task rate times its routing fraction;
-        # upstream being overloaded throttles downstream arrivals).
+    def simulate_sweep(self, omegas: Sequence[float], *,
+                       duration: float = 60.0, dt: float = 0.05,
+                       warmup: float = 5.0,
+                       latency_sample_every: float = 0.25) -> List[SimResult]:
+        """Simulate every input rate in ``omegas`` through ONE time loop.
+
+        All per-group state is a ``(G, K)`` array (groups x rates); each tick
+        advances the whole sweep at once.  Results match per-rate ``run``
+        calls (``run`` *is* the K=1 column of this loop).
+        """
+        gi = self.gi
+        omegas = np.asarray(omegas, dtype=float)
+        K = len(omegas)
+        T = len(gi.tasks)
+        G = gi.n_groups
+        S = len(gi.slots)
+        caps = effective_capacity_matrix(gi, omegas,
+                                         cpu_penalty=self.cpu_penalty)
+        cap_pos = caps > 0
+        safe_caps = np.where(cap_pos, caps, 1.0)
+        queues = np.zeros((G, K))
+        busy_acc = np.zeros((S, K))
+        src_rate = gi.betas[:, None] * omegas[None, :]   # (T, K)
+        realized = np.zeros((T, K))
+        latency_t: List[float] = []
+        latency_v: List[np.ndarray] = []
+
+        sample_every = max(1, int(latency_sample_every / dt))
         steps = int(duration / dt)
         for step in range(steps):
-            now = step * dt
-            # per-task realized output rate this tick (source first)
-            realized: Dict[str, float] = {}
-            for t in self._topo:
-                name = t.name
-                in_rate = rates[name]
-                # throttle by upstream realization
-                ins = self.dag.in_edges(name)
-                if ins:
-                    up = 0.0
-                    for e in ins:
-                        sel = e.selectivity
-                        src_out = realized.get(e.src, 0.0) * sel
-                        outs = len(self.dag.out_edges(e.src))
-                        from .dag import Routing
-                        if self.dag.routing[e.src] is Routing.SPLIT and outs:
-                            src_out /= outs
-                        up += src_out
-                    in_rate = up
-                g = self.groups.get(name, {})
-                if not g:
-                    realized[name] = in_rate
+            # per-task realized output rate this tick, in topo order
+            # (upstream being overloaded throttles downstream arrivals)
+            for row in range(T):
+                edges = gi.in_edges[row]
+                if not edges:
+                    in_rate = src_rate[row]
+                else:
+                    in_rate = np.zeros(K)
+                    for src, mult in edges:
+                        in_rate = in_rate + realized[src] * mult
+                sl = gi.task_slice(row)
+                if sl.start == sl.stop:
+                    realized[row] = in_rate
                     continue
-                out_rate = 0.0
-                for s, q in g.items():
-                    key = (name, s)
-                    arr = in_rate * frac[name].get(s, 0.0)
-                    cap = self.caps[name][s]
-                    q_len = queues[key] + arr * dt
-                    served = min(q_len, cap * dt)
-                    queues[key] = q_len - served
-                    out_rate += served / dt
-                    busy_acc[s] += (served / dt) / cap * dt if cap > 0 else 0.0
-                realized[name] = out_rate
-            # latency sample along the critical path (queue delay + service
-            # + network hops), the paper's per-tuple end-to-end measure.
-            if now >= 0 and (step % max(1, int(latency_sample_every / dt)) == 0):
-                lat = self._path_latency(queues, frac, rates)
-                latency_t.append(now)
-                latency_v.append(lat)
+                arr = in_rate[None, :] * gi.g_frac[sl, None]
+                q_len = queues[sl] + arr * dt
+                served = np.minimum(q_len, caps[sl] * dt)
+                queues[sl] = q_len - served
+                realized[row] = served.sum(axis=0) / dt
+                np.add.at(busy_acc, gi.g_slot[sl],
+                          np.where(cap_pos[sl], served / safe_caps[sl], 0.0))
+            if step % sample_every == 0:
+                latency_t.append(step * dt)
+                latency_v.append(self._path_latency(queues, caps))
 
         # stability: slope of latencies past warm-up (§5.1 criterion)
-
         k0 = next((i for i, t0 in enumerate(latency_t) if t0 >= warmup), 0)
-        tail = latency_v[k0:] if len(latency_v) > k0 + 2 else latency_v
-        slope = latency_slope(tail)
-        stable = slope <= 1e-3
-        mean_lat = sum(tail) / len(tail) if tail else 0.0
-        p99 = sorted(tail)[int(0.99 * (len(tail) - 1))] if tail else 0.0
-        return SimResult(
-            omega=omega, stable=stable, latency_slope=slope,
-            mean_latency=mean_lat, p99_latency=p99, latency_samples=tail,
-            queue_total=sum(queues.values()),
-            slot_busy={s: busy_acc[s] / duration for s in busy_acc},
-        )
+        lat = np.stack(latency_v) if latency_v else np.zeros((0, K))
+        tail = lat[k0:] if lat.shape[0] > k0 + 2 else lat
+        slopes = _slope_columns(tail)
+        results: List[SimResult] = []
+        for k in range(K):
+            col = tail[:, k]
+            mean_lat = float(col.mean()) if col.size else 0.0
+            p99 = float(np.sort(col)[int(0.99 * (col.size - 1))]) \
+                if col.size else 0.0
+            results.append(SimResult(
+                omega=float(omegas[k]), stable=bool(slopes[k] <= 1e-3),
+                latency_slope=float(slopes[k]), mean_latency=mean_lat,
+                p99_latency=p99, latency_samples=col.tolist(),
+                queue_total=float(queues[:, k].sum()),
+                slot_busy={gi.slots[s]: float(busy_acc[s, k] / duration)
+                           for s in range(S)},
+            ))
+        return results
 
-    def _path_latency(self, queues, frac, rates) -> float:
-        """Expected end-to-end latency: per task, the routing-weighted queue
-        wait + service time, plus hop latency along DAG edges."""
-        per_task: Dict[str, float] = {}
-        for name, g in self.groups.items():
-            if not g:
-                per_task[name] = 0.0
+    def _path_latency(self, queues: np.ndarray, caps: np.ndarray) -> np.ndarray:
+        """Expected end-to-end latency per sweep column: per task, the
+        routing-weighted queue wait + service time, plus hop latency along
+        the longest (source -> sink) DAG path."""
+        gi = self.gi
+        K = queues.shape[1]
+        contrib = np.where(caps > 0,
+                           gi.g_frac[:, None] * (queues + 1.0)
+                           / np.where(caps > 0, caps, 1.0),
+                           0.0)
+        per_task = np.zeros((len(gi.tasks), K))
+        np.add.at(per_task, gi.g_task, contrib)
+        best = np.zeros_like(per_task)
+        for row in range(len(gi.tasks)):
+            edges = gi.in_edges[row]
+            if not edges:
+                best[row] = per_task[row]
                 continue
-            acc = 0.0
-            for s, q in g.items():
-                f = frac[name].get(s, 0.0)
-                cap = self.caps[name][s]
-                if cap <= 0:
-                    continue
-                wait = queues[(name, s)] / cap
-                acc += f * (wait + 1.0 / cap)
-            per_task[name] = acc
-        # longest path by expected latency (source -> sink)
-        best: Dict[str, float] = {}
-        for t in self._topo:
-            name = t.name
-            ins = self.dag.in_edges(name)
-            if not ins:
-                best[name] = per_task.get(name, 0.0)
-            else:
-                best[name] = per_task.get(name, 0.0) + max(
-                    best[e.src] + self._hop_latency(e.src, name) for e in ins)
-        sinks = [t.name for t in self.dag.sinks()]
-        return max(best[s] for s in sinks) if sinks else 0.0
+            up = np.full(K, -np.inf)
+            for (src, _), hop in zip(edges, self._hops[row]):
+                up = np.maximum(up, best[src] + hop)
+            best[row] = per_task[row] + up
+        if not self._sink_rows:
+            return np.zeros(K)
+        return np.max(best[self._sink_rows], axis=0)
 
     # -- derived measurements ---------------------------------------------------
     def max_stable_rate(self, *, lo: float = 1.0, hi: float = 1e5,
                         tol: float = 0.01, duration: float = 30.0,
-                        dt: float = 0.05) -> float:
-        """Binary-search the highest stable DAG rate (the paper's empirical
-        'actual rate': increase until latency slope turns positive)."""
+                        dt: float = 0.05, probes: int = 8) -> float:
+        """Highest stable DAG rate (the paper's empirical 'actual rate':
+        increase until the latency slope turns positive).
+
+        Each refinement pass sweeps ``probes`` interior rates through one
+        vectorized ``simulate_sweep`` call, shrinking the bracket by
+        ``probes + 1`` per pass — the sweep-engine replacement for
+        one-rate-at-a-time bisection.
+        """
         # quick analytic bracket from capacities
         from .predictor import predict_max_rate
         analytic = predict_max_rate(self.dag, self.alloc, self.mapping,
@@ -216,13 +229,29 @@ class DataflowSimulator:
         hi = min(hi, analytic * 1.5 + 10)
         lo_ok, hi_bad = 0.0, hi
         while hi_bad - lo_ok > tol * max(1.0, lo_ok):
-            mid = 0.5 * (lo_ok + hi_bad)
-            res = self.run(mid, duration=duration, dt=dt)
-            if res.stable:
-                lo_ok = mid
-            else:
-                hi_bad = mid
+            mids = np.linspace(lo_ok, hi_bad, probes + 2)[1:-1]
+            stable = [r.stable for r in self.simulate_sweep(
+                mids, duration=duration, dt=dt)]
+            n_ok = next((i for i, s in enumerate(stable) if not s),
+                        len(stable))
+            if n_ok > 0:
+                lo_ok = float(mids[n_ok - 1])
+            if n_ok < len(mids):
+                hi_bad = float(mids[n_ok])
+            # every probe stable: lo_ok moved to mids[-1], so the bracket
+            # still shrank by (probes+1) and the loop converges toward hi
         return lo_ok
+
+
+def _slope_columns(samples: np.ndarray) -> np.ndarray:
+    """Least-squares slope of each column vs sample index (vectorized
+    :func:`latency_slope`)."""
+    n = samples.shape[0]
+    if n < 2:
+        return np.zeros(samples.shape[1] if samples.ndim == 2 else 1)
+    x = np.arange(n) - (n - 1) / 2.0
+    den = float((x ** 2).sum())
+    return x @ (samples - samples.mean(axis=0)) / den
 
 
 def measured_resources(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,

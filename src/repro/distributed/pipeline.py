@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 Params = Any
 
 
@@ -94,7 +96,7 @@ def gpipe(layer_fn: Callable[[Params, jax.Array], jax.Array],
         # over the pipe axis replicates them on every rank
         return jax.lax.psum(outputs, pipe_axis)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         pipelined, mesh=mesh,
         in_specs=(P(pipe_axis), P()),
         out_specs=P(),

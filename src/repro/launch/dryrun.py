@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import cost_analysis as compat_cost_analysis
 from ..configs import ARCHS, SHAPES, get_config, shape_applicable
 from ..configs.base import ModelConfig, ShapeConfig
 from ..distributed.hloparse import parse_collectives
@@ -104,7 +105,7 @@ def _lower_metrics(cfg: ModelConfig, shape: ShapeConfig, env: Env,
                                              microbatches=microbatches)
     compiled = jax.jit(fn, in_shardings=shardings,
                        donate_argnums=donate).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = compat_cost_analysis(compiled)
     colls = parse_collectives(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -187,7 +188,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat_cost_analysis(compiled)
         hlo = compiled.as_text()
         colls = parse_collectives(hlo)
         if save_hlo:

@@ -11,23 +11,22 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
+from ..compat import default_axis_types, make_mesh
 from ..models.common import Env
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=default_axis_types(len(axes)))
 
 
 def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
     """Small mesh over forced host devices (tests/examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=default_axis_types(2))
 
 
 def env_for_mesh(mesh: Optional[Mesh], **overrides) -> Env:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .common import Env, dense_init
 from .layers import swiglu, init_swiglu
 
@@ -189,7 +190,7 @@ def moe_ffn(env: Env, p: Params, x: jax.Array, *, num_experts: int,
     if env.mesh is not None and tp > 1:
         batch = env.batch_spec_entry()
         seq_entry = env.tp_axis if token_parallel else None
-        mapped = jax.shard_map(
+        mapped = shard_map(
             body, mesh=env.mesh,
             in_specs=(P(batch, seq_entry, None), P(None, None),
                       P(env.tp_axis, None, None), P(env.tp_axis, None, None),

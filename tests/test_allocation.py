@@ -1,7 +1,10 @@
 """LSA (Alg. 2) and MBA (Alg. 3) allocation."""
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:        # property tests skip; plain tests still run
+    from _hypothesis_fallback import hypothesis, st
 import pytest
 
 from repro.core import (ALL_DAGS, MICRO_DAGS, allocate_lsa, allocate_mba,

@@ -1,0 +1,171 @@
+"""Vectorized batch planning engine vs the scalar reference paths.
+
+The contract of repro.core.batch / the sweep simulator is *equivalence*: the
+array passes must reproduce the scalar allocators, the +10 t/s planning scan,
+and per-rate simulator runs — while doing asymptotically less work.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:        # property tests skip; plain tests still run
+    from _hypothesis_fallback import hypothesis, st
+
+from repro.core import (ALL_DAGS, MICRO_DAGS, DataflowSimulator, batch_allocate,
+                        batch_feasible, batch_slots, allocate_lsa, allocate_mba,
+                        linear_dag, paper_library, plan)
+from repro.core.perfmodel import PAPER_MODELS
+from repro.core.scheduler import max_planned_rate
+
+PAIRS = (("lsa", "dsm"), ("lsa", "rsm"),
+         ("mba", "dsm"), ("mba", "rsm"), ("mba", "sam"))
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return paper_library()
+
+
+# -- vectorized PerfModel accessors ------------------------------------------
+
+def test_perfmodel_array_matches_scalar():
+    """Array-valued I/C/M are bit-identical to scalar evaluation."""
+    rng = np.random.default_rng(0)
+    for kind, m in PAPER_MODELS.items():
+        qs = np.concatenate([rng.uniform(-2, m.points[-1].tau + 5, 200),
+                             np.arange(0, m.points[-1].tau + 3, dtype=float)])
+        for fn in (m.I, m.C, m.M):
+            vec = fn(qs)
+            assert vec.shape == qs.shape
+            assert np.array_equal(vec, np.array([fn(float(q)) for q in qs]))
+
+
+def test_perfmodel_inverse_matches_scalar():
+    """T_many equals the scalar smallest-adequate-thread-count search."""
+    rng = np.random.default_rng(1)
+    for kind, m in PAPER_MODELS.items():
+        omegas = np.concatenate([rng.uniform(0, m.omega_hat * 1.3, 200),
+                                 [0.0, -5.0, m.omega_hat]])
+        got = m.T_many(omegas)
+        for w, t in zip(omegas, got):
+            ref = m.T(float(w))
+            assert t == (-1 if ref is None else ref)
+
+
+# -- batch allocation vs scalar allocators -----------------------------------
+
+@pytest.mark.parametrize("algo,scalar", [("lsa", allocate_lsa),
+                                         ("mba", allocate_mba)])
+def test_batch_allocate_matches_scalar(lib, algo, scalar):
+    omegas = np.arange(10.0, 510.0, 10.0)
+    for name, mk in ALL_DAGS.items():
+        dag = mk()
+        ba = batch_allocate(dag, omegas, lib, algo)
+        for k in range(0, len(omegas), 7):
+            ref = scalar(dag, float(omegas[k]), lib)
+            assert ba.slots[k] == ref.slots
+            for i, tname in enumerate(ba.task_names):
+                t = ref.tasks[tname]
+                assert ba.threads[i, k] == t.threads, (name, tname)
+                assert ba.cpu[i, k] == pytest.approx(t.cpu, abs=1e-9)
+                assert ba.mem[i, k] == pytest.approx(t.mem, abs=1e-9)
+
+
+def test_batch_feasible_fleet(lib):
+    """Fleet call: per-DAG feasibility masks over one shared rate grid."""
+    omegas = np.arange(10.0, 310.0, 10.0)
+    dags = {name: mk() for name, mk in MICRO_DAGS.items()}
+    masks = batch_feasible(dags, omegas, lib, algorithm="mba",
+                           budget_slots=20)
+    assert set(masks) == set(dags)
+    for name, mask in masks.items():
+        ref = batch_slots(dags[name], omegas, lib, "mba") <= 20
+        assert np.array_equal(mask, ref)
+        assert mask[0]        # 10 t/s fits 20 slots on every micro DAG
+
+
+@hypothesis.given(omega=st.floats(min_value=1.0, max_value=800.0))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_batch_slots_property(omega):
+    """Any single rate evaluated through the batch path equals the scalar
+    allocator's slot estimate."""
+    lib = paper_library()
+    dag = linear_dag()
+    assert batch_slots(dag, [omega], lib, "mba")[0] == \
+        allocate_mba(dag, omega, lib).slots
+
+
+# -- bisection planner vs the §8.5 linear scan --------------------------------
+
+def test_bisect_matches_scan_all_dags(lib):
+    """Identical planned rate on every seed (DAG, scheduler pair), with >=5x
+    fewer scalar allocator calls in aggregate (the §8.5 protocol cost)."""
+    scan_calls = bisect_calls = 0
+    for name, mk in ALL_DAGS.items():
+        for alloc_name, map_name in PAIRS:
+            dag = mk()
+            s_scan, s_bis = {}, {}
+            r_scan = max_planned_rate(dag, lib, allocator=alloc_name,
+                                      mapper=map_name, budget_slots=20,
+                                      method="scan", stats=s_scan)
+            r_bis = max_planned_rate(dag, lib, allocator=alloc_name,
+                                     mapper=map_name, budget_slots=20,
+                                     method="bisect", stats=s_bis)
+            assert r_scan == r_bis, (name, alloc_name, map_name)
+            scan_calls += s_scan["allocator_calls"]
+            bisect_calls += s_bis["allocator_calls"]
+    assert bisect_calls * 5 <= scan_calls, (scan_calls, bisect_calls)
+
+
+def test_bisect_zero_when_nothing_fits(lib):
+    """The widest app DAG cannot run on a single slot at any grid rate."""
+    from repro.core import grid_dag
+    for method in ("scan", "bisect"):
+        assert max_planned_rate(grid_dag(), lib, allocator="mba",
+                                mapper="sam", budget_slots=1,
+                                method=method) == 0.0
+
+
+# -- sweep simulator vs per-rate runs -----------------------------------------
+
+def test_simulate_sweep_matches_per_rate_runs(lib):
+    dag = linear_dag()
+    s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+    sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+    omegas = np.linspace(20.0, 140.0, 13)
+    swept = sim.simulate_sweep(omegas, duration=10, dt=0.1)
+    for w, r in zip(omegas, swept):
+        ref = sim.run(float(w), duration=10, dt=0.1)
+        assert r.stable == ref.stable
+        assert r.latency_slope == pytest.approx(ref.latency_slope, abs=1e-12)
+        assert r.mean_latency == pytest.approx(ref.mean_latency, abs=1e-12)
+        assert r.p99_latency == pytest.approx(ref.p99_latency, abs=1e-12)
+        assert r.queue_total == pytest.approx(ref.queue_total, abs=1e-9)
+        assert r.slot_busy.keys() == ref.slot_busy.keys()
+        for slot, busy in ref.slot_busy.items():
+            assert r.slot_busy[slot] == pytest.approx(busy, abs=1e-12)
+
+
+def test_sweep_finds_stability_boundary(lib):
+    """Stability along the sweep is monotone and brackets the predicted
+    capacity of the schedule."""
+    dag = linear_dag()
+    s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+    sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+    omegas = np.linspace(20.0, 200.0, 19)
+    stable = [r.stable for r in sim.simulate_sweep(omegas, duration=10, dt=0.1)]
+    assert stable[0] and not stable[-1]
+    assert stable == sorted(stable, reverse=True)  # True...True False...False
+
+
+def test_max_stable_rate_consistent_with_sweep(lib):
+    dag = linear_dag()
+    s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+    sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+    r = sim.max_stable_rate(duration=10, dt=0.1)
+    lo, hi = sim.simulate_sweep([r * 0.95, r * 1.1], duration=10, dt=0.1)
+    assert lo.stable
+    assert not hi.stable

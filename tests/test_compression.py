@@ -38,11 +38,13 @@ def test_error_feedback_accumulates_lost_mass():
 
 def test_reduce_under_shard_map_single_axis():
     """Compressed psum matches the exact mean within quantization error."""
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import AxisType, make_mesh, shard_map
     devs = jax.devices()
     if len(devs) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1,), ("dp",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("dp",), axis_types=(AxisType.Auto,))
     comp = ErrorFeedbackCompressor(block=32)
     g = {"w": jnp.linspace(-1, 1, 128)}
     state = comp.init_state(g)
@@ -50,7 +52,7 @@ def test_reduce_under_shard_map_single_axis():
     def body(g, r):
         return comp.reduce(g, r, axis_name="dp")
 
-    out, new_state = jax.shard_map(
+    out, new_state = shard_map(
         body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
         check_vma=False)(g, state)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),

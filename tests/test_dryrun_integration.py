@@ -12,6 +12,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [("mamba2-370m", "decode_32k")])
 def test_dryrun_cell_compiles(tmp_path, arch, shape):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))

@@ -41,6 +41,7 @@ def test_replan_multiple_failures():
         assert slot.vm not in failed
 
 
+@pytest.mark.slow
 def test_elastic_checkpoint_remesh_subprocess():
     """Save a TRAIN state sharded on a 4-device mesh, restore onto a
     2-device mesh (shrunk cluster) and verify values — the lose-a-pod
@@ -50,7 +51,8 @@ def test_elastic_checkpoint_remesh_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import sys; sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import AxisType, make_mesh
         from repro.configs import get_config
         from repro.models import get_model
         from repro.models.common import Env
@@ -61,8 +63,8 @@ def test_elastic_checkpoint_remesh_subprocess():
         api = get_model(cfg)
         state = init_train_state(api, jax.random.PRNGKey(0), AdamWConfig())
 
-        mesh4 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,)*2)
+        mesh4 = make_mesh((2, 2), ("data", "model"),
+                          axis_types=(AxisType.Auto,)*2)
         env4 = Env(mesh=mesh4, batch_axes=("data",), tp_axis="model")
         specs = tree_param_specs(env4, state)
         sharded = jax.tree.map(
@@ -73,8 +75,8 @@ def test_elastic_checkpoint_remesh_subprocess():
         ckpt.save(7, sharded)
 
         # "lose half the cluster": restore onto a 2-device mesh
-        mesh2 = jax.make_mesh((1, 2), ("data", "model"),
-                              axis_types=(AxisType.Auto,)*2)
+        mesh2 = make_mesh((1, 2), ("data", "model"),
+                          axis_types=(AxisType.Auto,)*2)
         env2 = Env(mesh=mesh2, batch_axes=("data",), tp_axis="model")
         specs2 = tree_param_specs(env2, state)
         flatmap = {}

@@ -16,6 +16,7 @@ def _fp32_env():
     return dataclasses.replace(default_env(), compute_dtype=jnp.float32)
 
 
+@pytest.mark.slow
 def test_whisper_prefill_decode_matches_forward(key):
     cfg = get_config("whisper-large-v3").reduced()
     api = get_model(cfg)
@@ -41,6 +42,7 @@ def test_whisper_prefill_decode_matches_forward(key):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_zamba_hybrid_prefill_decode_consistency(key):
     """zamba2: mamba states AND the shared-attn KV cache must both carry."""
     cfg = get_config("zamba2-1.2b").reduced()
@@ -62,6 +64,7 @@ def test_zamba_hybrid_prefill_decode_consistency(key):
                                rtol=5e-3, atol=5e-3)
 
 
+@pytest.mark.slow
 def test_moe_prefill_decode_consistency(key):
     cfg = dataclasses.replace(get_config("moonshot-v1-16b-a3b").reduced(),
                               moe_capacity=8.0)  # no drops -> exact

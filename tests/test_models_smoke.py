@@ -40,6 +40,7 @@ def test_forward_shapes_and_finite(arch, key):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_train_step_no_nans(arch, key):
     cfg = get_config(arch).reduced()

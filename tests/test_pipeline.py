@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
+from repro.compat import AxisType, make_mesh
 from repro.distributed.pipeline import gpipe, split_stages
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -30,7 +30,7 @@ def _layer_fn(stage_params, x):
 
 
 def test_gpipe_single_stage_matches_sequential():
-    mesh = jax.make_mesh((1,), ("pipe",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("pipe",), axis_types=(AxisType.Auto,))
     rng = np.random.default_rng(0)
     L, d, n_mb, mb = 4, 8, 3, 5
     ws = jnp.asarray(rng.normal(size=(L, d, d)) * 0.3, jnp.float32)
@@ -46,6 +46,7 @@ def test_gpipe_single_stage_matches_sequential():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_gpipe_multi_stage_subprocess():
     """4 pipeline stages on 4 forced host devices == sequential."""
     script = textwrap.dedent("""
@@ -53,7 +54,7 @@ def test_gpipe_multi_stage_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import sys; sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh
         from repro.distributed.pipeline import gpipe, split_stages
 
         def layer_fn(stage_params, x):
@@ -62,7 +63,7 @@ def test_gpipe_multi_stage_subprocess():
             y, _ = jax.lax.scan(body, x, stage_params)
             return y
 
-        mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
         rng = np.random.default_rng(1)
         L, d, n_mb, mb = 8, 16, 6, 4
         ws = jnp.asarray(rng.normal(size=(L, d, d)) * 0.3, jnp.float32)

@@ -3,8 +3,9 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.distributed.sharding import (batch_spec, cache_spec, param_spec,
                                         tree_param_specs)
@@ -17,8 +18,8 @@ from repro.train.train_step import init_train_state
 
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _env(multi=False):

@@ -102,6 +102,7 @@ def test_training_reduces_loss(key):
     assert losses[-1] < losses[0] - 0.5, losses[::8]
 
 
+@pytest.mark.slow
 def test_microbatched_grads_match_full(key):
     cfg = get_config("minicpm-2b").reduced()
     api = get_model(cfg)
