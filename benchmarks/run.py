@@ -9,7 +9,7 @@ from __future__ import annotations
 import json
 import sys
 
-from . import (bench_app_dags, bench_latency, bench_micro_dags,
+from . import (bench_app_dags, bench_fleet, bench_latency, bench_micro_dags,
                bench_optimized, bench_perfmodels, bench_predictability,
                bench_roofline, bench_serving, bench_sweep)
 from .common import timed
@@ -21,6 +21,7 @@ BENCHES = [
     ("fig9_12_predictability", bench_predictability.run),
     ("fig13_latency", bench_latency.run),
     ("sweep_engine", bench_sweep.run),
+    ("fleet_planner", bench_fleet.run),
     ("serving_planner", bench_serving.run),
     ("roofline_table", bench_roofline.run),
     ("perf_optimized", bench_optimized.run),

@@ -9,6 +9,7 @@ Public surface:
 * DSM / RSM / SAM mapping + VM acquisition (``mapping``)
 * end-to-end planning (``scheduler``), model-based prediction
   (``predictor``) and the fluid simulator (``simulator``)
+* multi-DAG fleet planning over one shared slot budget (``fleet``)
 """
 
 from .dag import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Edge, Routing,
@@ -17,15 +18,21 @@ from .dag import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Edge, Routing,
 from .perfmodel import (ModelLibrary, ModelPoint, PAPER_MODELS, PerfModel,
                         TrialResult, build_perf_model, latency_slope,
                         paper_library)
-from .allocation import ALLOCATORS, Allocation, TaskAllocation, allocate_lsa, allocate_mba
+from .allocation import (ALLOCATORS, Allocation, TaskAllocation,
+                         UnsupportableRateError, allocate_lsa, allocate_mba)
 from .batch import (BatchAllocation, batch_allocate, batch_feasible,
                     batch_slots)
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
                       Mapping, SlotId, Thread, VM, acquire_vms, map_dsm,
                       map_rsm, map_sam)
 from .routing import RoutingPolicy
-from .predictor import predict_max_rate, predict_resources
+from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
+                        build_group_index, effective_capacity_matrix,
+                        predict_max_rate, predict_max_rate_gi,
+                        predict_resources, predict_resources_sweep)
 from .scheduler import Schedule, max_planned_rate, plan, replan_on_failure
+from .fleet import (FleetEntry, FleetPlan, fleet_resource_surfaces,
+                    plan_fleet)
 from .simulator import DataflowSimulator, SimResult, measured_resources
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -17,6 +17,22 @@ from .dag import Dataflow
 from .perfmodel import ModelLibrary, PerfModel
 
 
+class UnsupportableRateError(RuntimeError):
+    """Raised when an allocator cannot support a task's residual rate with
+    any measured thread count (a degenerate or saturated profile).
+
+    The typed counterpart of the mapper's ``InsufficientResourcesError``:
+    planners treat it as "this rate does not fit" rather than crashing, and
+    unlike a bare ``assert`` it survives ``python -O``.
+    """
+
+    def __init__(self, task: str, rate: float, message: str = ""):
+        super().__init__(
+            message or f"rate {rate!r} unsupportable for task {task!r}")
+        self.task = task
+        self.rate = rate
+
+
 @dataclasses.dataclass
 class TaskAllocation:
     """Allocation for one task: threads + estimated resources (slot units)."""
@@ -84,16 +100,22 @@ def allocate_lsa(dag: Dataflow, omega: float, models: ModelLibrary) -> Allocatio
             continue
         w = rates[t.name]
         w_bar = model.omega_bar
-        tau, c, m = 0, 0.0, 0.0
-        while w >= w_bar and w_bar > 0:
+        # floor arithmetic, not repeated subtraction: near-degenerate
+        # profiles (tiny positive omega_bar) make `w -= w_bar` a float
+        # no-op that never terminates.  floor(w / w_bar), not w // w_bar —
+        # float floor-division can land one below floor-of-quotient, and
+        # the batch path (_lsa_task) uses the division form
+        full = int(math.floor(w / w_bar)) if w_bar > 0 else 0
+        resid = w - full * w_bar
+        tau = full
+        c = model.C(1) * full
+        m = model.M(1) * full
+        if resid > 1e-12:
+            if w_bar <= 0:
+                raise UnsupportableRateError(t.name, rates[t.name])
             tau += 1
-            w -= w_bar
-            c += model.C(1)
-            m += model.M(1)
-        if w > 1e-12:
-            tau += 1
-            c += model.C(1) * (w / w_bar)
-            m += model.M(1) * (w / w_bar)
+            c += model.C(1) * (resid / w_bar)
+            m += model.M(1) * (resid / w_bar)
         out[t.name] = TaskAllocation(t.name, t.kind, tau, c, m, rates[t.name])
     return Allocation(dag.name, omega, "lsa", out)
 
@@ -118,25 +140,26 @@ def allocate_mba(dag: Dataflow, omega: float, models: ModelLibrary) -> Allocatio
         w = rates[t.name]
         w_hat = model.omega_hat
         tau_hat = model.tau_hat
-        tau, c, m = 0, 0.0, 0.0
-        bundles = 0
-        while w >= w_hat and w_hat > 0:
-            tau += tau_hat
-            bundles += 1
-            w -= w_hat
-            c += 1.0
-            m += 1.0
-        if w > 1e-12:
-            tau_prime = model.T(w)
-            assert tau_prime is not None and tau_prime >= 1, \
-                f"residual rate {w} exceeds omega_hat for {t.kind}"
+        # floor arithmetic like LSA above (and _mba_task): repeated
+        # subtraction of a tiny positive omega_hat never terminates
+        bundles = int(math.floor(w / w_hat)) if w_hat > 0 else 0
+        resid = w - bundles * w_hat
+        tau = bundles * tau_hat
+        c = float(bundles)
+        m = float(bundles)
+        if resid > 1e-12:
+            tau_prime = model.T(resid)
+            if tau_prime is None or tau_prime < 1:
+                raise UnsupportableRateError(
+                    t.name, rates[t.name],
+                    f"residual rate {resid} exceeds omega_hat for {t.kind}")
             tau += tau_prime
             if tau_prime > 1:
                 c += model.C(tau_prime)
                 m += model.M(tau_prime)
             else:
-                c += model.C(1) * (w / model.I(1))
-                m += model.M(1) * (w / model.I(1))
+                c += model.C(1) * (resid / model.I(1))
+                m += model.M(1) * (resid / model.I(1))
         out[t.name] = TaskAllocation(t.name, t.kind, tau, c, m, rates[t.name],
                                      bundle_size=tau_hat, full_bundles=bundles)
     return Allocation(dag.name, omega, "mba", out)

@@ -21,6 +21,7 @@ from typing import Callable, Dict, List, Mapping, Sequence
 
 import numpy as np
 
+from .allocation import UnsupportableRateError
 from .dag import Dataflow
 from .perfmodel import ModelLibrary
 
@@ -57,29 +58,59 @@ class BatchAllocation:
     @property
     def slots(self) -> np.ndarray:
         """rho per rate — ``max(ceil(sum cpu), ceil(sum mem), 1)``, exactly
-        the scalar :attr:`Allocation.slots` rule."""
+        the scalar :attr:`Allocation.slots` rule.  Unsupportable rates
+        (``clip_unsupportable``) carry infinite CPU/mem, and near-degenerate
+        profiles can demand astronomically many slots; both are clamped to
+        2**62 (exactly float64-representable) before the integer cast, so
+        they never wrap negative and no real budget ever fits them."""
         rho = np.maximum(np.ceil(self.total_cpu - 1e-9),
                          np.ceil(self.total_mem - 1e-9))
-        return np.maximum(rho, 1).astype(int)
+        rho = np.clip(rho, 1, 2.0 ** 62)
+        return np.where(np.isnan(rho), 2.0 ** 62, rho).astype(np.int64)
 
 
-def _lsa_task(model, w: np.ndarray):
+def _to_threads(tau: np.ndarray) -> np.ndarray:
+    """Integer thread counts without wrap-around: near-degenerate profiles
+    (tiny ``omega_bar``/``omega_hat``) can demand more threads than int64
+    holds; clamp at 2**62 before the cast."""
+    return np.minimum(tau, 2.0 ** 62).astype(np.int64)
+
+
+def _clip_or_raise(task: str, w: np.ndarray, bad: np.ndarray, clip: bool,
+                   tau: np.ndarray, cpu: np.ndarray, mem: np.ndarray):
+    """Shared unsupportable-rate handling: raise the typed error (the scalar
+    allocators' behaviour) or, for planners sweeping past a DAG's ceiling,
+    mark the offending columns infinitely expensive so the feasibility
+    oracle reports them as not fitting any budget."""
+    if not np.any(bad):
+        return tau, cpu, mem
+    if not clip:
+        raise UnsupportableRateError(task, float(w[bad][0]))
+    return (np.where(bad, 0, tau).astype(np.int64),
+            np.where(bad, np.inf, cpu), np.where(bad, np.inf, mem))
+
+
+def _lsa_task(model, w: np.ndarray, task: str, clip: bool):
     """Vectorized Alg. 2 inner loop: one thread per ``omega_bar`` of rate,
     trailing fraction scaled down proportionally."""
     w_bar = model.omega_bar
     c1, m1 = model.C(1), model.M(1)
     if w_bar <= 0:
+        # degenerate profile: a single thread supports no rate at all, so
+        # every positive rate is unsupportable (the scalar allocator's
+        # UnsupportableRateError path).
         z = np.zeros_like(w)
-        return z.astype(int), z, z
+        return _clip_or_raise(task, w, w > 1e-12, clip,
+                              z.astype(int), z.copy(), z.copy())
     full = np.floor(w / w_bar)
     resid = w - full * w_bar
     has_resid = resid > 1e-12
-    tau = (full + has_resid).astype(int)
+    tau = _to_threads(full + has_resid)
     frac = np.where(has_resid, resid / w_bar, 0.0)
     return tau, c1 * (full + frac), m1 * (full + frac)
 
 
-def _mba_task(model, w: np.ndarray):
+def _mba_task(model, w: np.ndarray, task: str, clip: bool):
     """Vectorized Alg. 3 inner loop: full ``tau_hat`` bundles at ``omega_hat``
     charging a whole slot each; the residual gets the smallest adequate
     thread count with model-interpolated resources."""
@@ -96,26 +127,36 @@ def _mba_task(model, w: np.ndarray):
         resid = w - bundles * w_hat
     has_resid = resid > 1e-12
     tau_p = np.where(has_resid, model.T_many(resid), 0)
-    if np.any(tau_p < 0):
-        bad = float(resid[tau_p < 0][0])
-        raise AssertionError(
-            f"residual rate {bad} exceeds omega_hat for {model.kind}")
+    bad = tau_p < 0
+    tau_p = np.where(bad, 0, tau_p)
     one = tau_p == 1
     many = tau_p > 1
+    # tau_p == 1 implies I(1) >= resid > 0; guard the discarded branch anyway
+    # so degenerate zero-rate profiles don't warn on the clip path
+    i1 = model.I(1)
+    safe_i1 = i1 if i1 > 0 else 1.0
     cpu = bundles + np.where(many, model.C(tau_p), 0.0) \
-        + np.where(one, model.C(1) * resid / model.I(1), 0.0)
+        + np.where(one, model.C(1) * resid / safe_i1, 0.0)
     mem = bundles + np.where(many, model.M(tau_p), 0.0) \
-        + np.where(one, model.M(1) * resid / model.I(1), 0.0)
-    return (bundles * tau_hat + tau_p).astype(int), cpu, mem
+        + np.where(one, model.M(1) * resid / safe_i1, 0.0)
+    return _clip_or_raise(task, w, bad, clip,
+                          _to_threads(bundles * tau_hat + tau_p), cpu, mem)
 
 
 _BATCH_ALLOCATORS: Dict[str, Callable] = {"lsa": _lsa_task, "mba": _mba_task}
 
 
 def batch_allocate(dag: Dataflow, omegas: Sequence[float],
-                   models: ModelLibrary, algorithm: str = "mba"
-                   ) -> BatchAllocation:
-    """Allocate ``dag`` at every rate in ``omegas`` in one array pass."""
+                   models: ModelLibrary, algorithm: str = "mba",
+                   *, clip_unsupportable: bool = False) -> BatchAllocation:
+    """Allocate ``dag`` at every rate in ``omegas`` in one array pass.
+
+    A rate no thread count supports raises
+    :class:`~repro.core.allocation.UnsupportableRateError` like the scalar
+    allocators; with ``clip_unsupportable`` those cells instead get infinite
+    CPU/mem (zero threads), so sweeping planners see them as infeasible at
+    any budget rather than aborting the whole grid pass.
+    """
     task_fn = _BATCH_ALLOCATORS[algorithm]
     omegas = np.asarray(omegas, dtype=float)
     betas = dag.get_rates(1.0)
@@ -128,7 +169,7 @@ def batch_allocate(dag: Dataflow, omegas: Sequence[float],
             c = np.full_like(w, model.C(1))
             m = np.full_like(w, model.M(1))
         else:
-            tau, c, m = task_fn(model, w)
+            tau, c, m = task_fn(model, w, t.name, clip_unsupportable)
         names.append(t.name)
         rates.append(w)
         threads.append(tau)
@@ -140,20 +181,26 @@ def batch_allocate(dag: Dataflow, omegas: Sequence[float],
 
 
 def batch_slots(dag: Dataflow, omegas: Sequence[float], models: ModelLibrary,
-                algorithm: str = "mba") -> np.ndarray:
+                algorithm: str = "mba",
+                *, clip_unsupportable: bool = False) -> np.ndarray:
     """Slot estimate rho for every rate — the bisection feasibility oracle."""
-    return batch_allocate(dag, omegas, models, algorithm).slots
+    return batch_allocate(dag, omegas, models, algorithm,
+                          clip_unsupportable=clip_unsupportable).slots
 
 
 def batch_feasible(dags: Mapping[str, Dataflow] | Sequence[Dataflow],
                    omegas: Sequence[float], models: ModelLibrary,
-                   *, algorithm: str = "mba", budget_slots: int
-                   ) -> Dict[str, np.ndarray]:
+                   *, algorithm: str = "mba", budget_slots: int,
+                   clip_unsupportable: bool = True) -> Dict[str, np.ndarray]:
     """Fleet feasibility: per DAG, a boolean mask over ``omegas`` of rates
-    whose slot estimate fits ``budget_slots``."""
+    whose slot estimate fits ``budget_slots``.  Unsupportable rates read as
+    infeasible (one degenerate DAG must not abort the whole fleet's masks);
+    pass ``clip_unsupportable=False`` for the raising scalar semantics."""
     if not isinstance(dags, Mapping):
         dags = {d.name: d for d in dags}
-    return {name: batch_slots(dag, omegas, models, algorithm) <= budget_slots
+    return {name: batch_slots(dag, omegas, models, algorithm,
+                              clip_unsupportable=clip_unsupportable)
+            <= budget_slots
             for name, dag in dags.items()}
 
 

@@ -1,0 +1,409 @@
+"""Multi-DAG fleet planning on the vectorized slot oracle.
+
+The §8.5 protocol answers "what rate fits a fixed cluster?" for ONE
+dataflow; a production cluster hosts a *fleet* — many DAGs from many
+tenants sharing one slot budget.  This module answers the joint question
+"what rate does every DAG get?" model-driven:
+
+1. one :func:`~repro.core.batch.batch_slots` pass per DAG evaluates the
+   slot estimate over the full (dag x rate) grid — all the allocator work
+   the rate search ever does;
+2. a joint bisection over the shared fairness level plus a greedy
+   water-fill of the leftover slots picks per-DAG planned rates under a
+   selectable objective (below);
+3. each planned DAG is mapped onto its share of one common VM pool —
+   §7.1 acquisition per DAG with fleet-unique VM ids, then
+   :func:`repro.core.scheduler.plan` with ``fixed_vms`` +
+   ``grow_fixed_vms`` (the §8.4 +1-slot retry rule on mapper
+   fragmentation) — yielding an ordinary per-DAG
+   :class:`~repro.core.scheduler.Schedule`, and the §8.5.2 sweep
+   predictor reports CPU/mem per DAG and per VM.
+
+Objectives
+----------
+``max_min``   lexicographic max-min fair rates: raise every DAG's rate
+              together as far as the budget allows, then water-fill the
+              leftover slots, always advancing a currently-lowest DAG
+              (cheapest increment first among ties).
+``weighted``  weighted max-min on ``rate / weight``: rates stay
+              proportional to the weights (proportional throughput
+              shares) until grid granularity or a DAG's feasibility
+              ceiling binds, then water-filling continues in ratio
+              space.  The minimum ratio is provably maximal (any higher
+              minimum needs every DAG at or past its chosen point, which
+              exceeds the budget); positions beyond the minimum are
+              greedy — exactly optimal on ``max_min``'s uniform grid,
+              best-effort for unequal weights where DAGs step by
+              different ratio increments.
+``priority``  strict tiers with preemption order: higher-priority DAGs
+              are planned first (weighted max-min within a tier, so
+              ``weights`` compose with tiers) and lower tiers split what
+              is left — when the budget shrinks, the lowest tier loses
+              rate first (:meth:`FleetPlan.preemption_order`).
+
+Like ``max_planned_rate``'s bisection, the level bisection and water-fill
+assume the slot surface is nondecreasing in rate within each DAG's
+feasible prefix — true for LSA/MBA over the seed profiles and pinned
+against brute-force budget partitions in ``tests/test_fleet.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .batch import batch_slots, bisect_largest_true, prefix_feasible_count
+from .dag import Dataflow
+from .mapping import DEFAULT_VM_SIZES, VM, acquire_vms
+from .perfmodel import ModelLibrary
+from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
+                        build_group_index, predict_resources_sweep)
+from .routing import RoutingPolicy
+from .scheduler import Schedule, plan
+
+ModelsArg = Union[ModelLibrary, Mapping[str, ModelLibrary]]
+
+OBJECTIVES = ("max_min", "weighted", "priority")
+
+
+# ---------------------------------------------------------------------------
+# Joint rate selection on the (dag x rate) slot surface.
+# ---------------------------------------------------------------------------
+
+def _level_indices(grid: np.ndarray, weights: np.ndarray, caps: np.ndarray,
+                   theta: float) -> np.ndarray:
+    """Per DAG, the largest grid index with ``grid[j] <= weight * theta``
+    (clamped to the DAG's feasible prefix); ``-1`` below the first point."""
+    idx = np.searchsorted(grid, weights * theta * (1 + 1e-12),
+                          side="right") - 1
+    return np.minimum(idx, caps - 1)
+
+
+def _cost(slots: np.ndarray, idx: np.ndarray) -> int:
+    """Total slot cost of a per-DAG grid-index vector (-1 = zero rate)."""
+    picked = np.take_along_axis(slots, np.maximum(idx, 0)[:, None],
+                                axis=1)[:, 0]
+    return int(np.where(idx >= 0, picked, 0).sum())
+
+
+def _bisect_common_level(grid: np.ndarray, slots: np.ndarray,
+                         caps: np.ndarray, weights: np.ndarray,
+                         budget: int) -> np.ndarray:
+    """Largest common fairness level ``theta`` (every DAG at the largest
+    grid rate <= weight * theta, capped by its own ceiling) whose total
+    slot cost fits the budget — O(log(D*K)) array probes."""
+    cands = [grid[:caps[d]] / weights[d] for d in range(len(weights))
+             if caps[d] > 0]
+    if not cands:
+        return np.full(len(weights), -1, dtype=int)
+    levels = np.unique(np.concatenate(cands))
+
+    def fits(k: int) -> bool:
+        return _cost(slots, _level_indices(grid, weights, caps,
+                                           float(levels[k]))) <= budget
+
+    best = bisect_largest_true(fits, len(levels))
+    if best < 0:
+        return np.full(len(weights), -1, dtype=int)
+    return _level_indices(grid, weights, caps, float(levels[best]))
+
+
+def _water_fill(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
+                weights: np.ndarray, budget: int, idx: np.ndarray
+                ) -> np.ndarray:
+    """Greedy lexicographic water-fill of the leftover budget: repeatedly
+    advance the DAG with the lowest current ``rate/weight`` (cheapest next
+    increment among ties) by one grid step; freeze it when its next step no
+    longer fits.  Increment costs are nondecreasing, so frozen stays frozen."""
+    idx = idx.copy()
+    total = _cost(slots, idx)
+
+    def ratio(d: int) -> float:
+        return float(grid[idx[d]] / weights[d]) if idx[d] >= 0 else 0.0
+
+    def incr(d: int) -> int:
+        nxt = int(slots[d, idx[d] + 1])
+        return nxt - (int(slots[d, idx[d]]) if idx[d] >= 0 else 0)
+
+    heap: List[Tuple[float, int, int]] = [
+        (ratio(d), incr(d), d) for d in range(len(weights))
+        if idx[d] + 1 < caps[d]]
+    heapq.heapify(heap)
+    while heap:
+        _, inc, d = heapq.heappop(heap)
+        if total + inc > budget:
+            continue                      # frozen: later steps cost >= inc
+        idx[d] += 1
+        total += inc
+        if idx[d] + 1 < caps[d]:
+            heapq.heappush(heap, (ratio(d), incr(d), d))
+    return idx
+
+
+def _plan_rates(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
+                weights: np.ndarray, budget: int) -> np.ndarray:
+    """Joint bisection to the common fairness level, then water-fill."""
+    idx = _bisect_common_level(grid, slots, caps, weights, budget)
+    return _water_fill(grid, slots, caps, weights, budget, idx)
+
+
+# ---------------------------------------------------------------------------
+# Fleet plan result.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetEntry:
+    """One DAG's share of the fleet plan."""
+
+    name: str
+    dag: Dataflow
+    weight: float
+    priority: int
+    omega: float                 # planned DAG input rate (0.0 = preempted)
+    grid_index: int              # index into FleetPlan.grid, -1 for 0.0
+    estimated_slots: int         # rho at the planned rate (0 when omega=0)
+    schedule: Optional[Schedule]           # None when unmapped / omega=0
+    prediction: Optional[ResourcePrediction]  # §8.5.2 at the planned rate
+    group_index: Optional[GroupIndex] = None  # flat view, plan's policy
+
+    @property
+    def acquired_slots(self) -> int:
+        return self.schedule.acquired_slots if self.schedule else 0
+
+
+@dataclasses.dataclass
+class FleetPlan:
+    """Joint plan for a fleet of DAGs sharing one cluster slot budget."""
+
+    objective: str
+    budget_slots: int
+    grid: np.ndarray                      # (K,) shared rate grid
+    slots_matrix: np.ndarray              # (D, K) slot estimates per DAG
+    entries: Dict[str, FleetEntry]        # insertion order = input order
+    pool: List[VM]                        # every VM acquired for the fleet
+    overflow_slots: int                   # acquired slots beyond the budget
+    policy: RoutingPolicy                 # routing the predictions assume
+
+    @property
+    def total_estimated_slots(self) -> int:
+        return sum(e.estimated_slots for e in self.entries.values())
+
+    @property
+    def total_acquired_slots(self) -> int:
+        return sum(e.acquired_slots for e in self.entries.values())
+
+    @property
+    def total_rate(self) -> float:
+        return sum(e.omega for e in self.entries.values())
+
+    @property
+    def vm_cpu(self) -> Dict[int, float]:
+        """Fleet-level predicted CPU% per VM id (sum over DAGs)."""
+        out: Dict[int, float] = {}
+        for e in self.entries.values():
+            if e.prediction:
+                for vm, c in e.prediction.vm_cpu.items():
+                    out[vm] = out.get(vm, 0.0) + c
+        return out
+
+    @property
+    def vm_mem(self) -> Dict[int, float]:
+        out: Dict[int, float] = {}
+        for e in self.entries.values():
+            if e.prediction:
+                for vm, m in e.prediction.vm_mem.items():
+                    out[vm] = out.get(vm, 0.0) + m
+        return out
+
+    def preemption_order(self) -> List[str]:
+        """Running DAGs in the order they would be preempted under budget
+        pressure: lowest priority tier first; within a tier, the highest
+        rate (most slots reclaimed) first."""
+        running = [e for e in self.entries.values() if e.omega > 0]
+        return [e.name for e in sorted(
+            running, key=lambda e: (e.priority, -e.omega, e.name))]
+
+    def describe(self) -> str:
+        lines = [f"FleetPlan[{self.objective}] budget={self.budget_slots} "
+                 f"slots, {len(self.entries)} DAGs, "
+                 f"est {self.total_estimated_slots} / "
+                 f"acq {self.total_acquired_slots} slots "
+                 f"(+{self.overflow_slots} overflow)"]
+        for e in self.entries.values():
+            sched = (f"vms={[vm.id for vm in e.schedule.vms]}"
+                     if e.schedule else "unmapped")
+            cpu = (f" cpu={sum(e.prediction.vm_cpu.values()):.2f}"
+                   f" mem={sum(e.prediction.vm_mem.values()):.2f}"
+                   if e.prediction else "")
+            lines.append(
+                f"  {e.name}: rate={e.omega:g} t/s (w={e.weight:g}, "
+                f"prio={e.priority}) slots={e.estimated_slots} {sched}{cpu}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The planner.
+# ---------------------------------------------------------------------------
+
+def _normalize_dags(dags) -> Dict[str, Dataflow]:
+    if isinstance(dags, Mapping):
+        return dict(dags)
+    out: Dict[str, Dataflow] = {}
+    for d in dags:
+        if d.name in out:
+            raise ValueError(f"duplicate DAG name {d.name!r}")
+        out[d.name] = d
+    return out
+
+
+def _models_for(models: ModelsArg, name: str) -> ModelLibrary:
+    if isinstance(models, ModelLibrary):
+        return models
+    return models[name]
+
+
+def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
+               objective: str = "max_min",
+               weights: Optional[Mapping[str, float]] = None,
+               priorities: Optional[Mapping[str, int]] = None,
+               allocator: str = "mba", mapper: Optional[str] = "sam",
+               step: float = 10.0, max_rate: float = 1e4,
+               vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+               policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
+               stats: Optional[Dict[str, int]] = None) -> FleetPlan:
+    """Share ``budget_slots`` across ``dags`` under ``objective``.
+
+    ``dags`` is a name->Dataflow mapping or a sequence of Dataflows;
+    ``models`` a shared :class:`ModelLibrary` or a per-DAG-name mapping of
+    libraries (multi-tenant fleets profile their own task kinds).
+    ``weights`` (default 1.0) scale the ``weighted`` objective;
+    ``priorities`` (default 0, larger = more important) define the
+    ``priority`` tiers.  ``mapper=None`` plans rates only (no VM pool, no
+    thread mappings) — the pure array-pass path used for optimality tests.
+
+    ``stats`` (optional) is filled with ``batch_passes`` (vectorized grid
+    passes, one per DAG), ``allocator_calls`` and ``mapper_calls`` (scalar
+    calls, one per mapping attempt) for comparison against per-DAG scans.
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown fleet objective {objective!r}")
+    if budget_slots <= 0:
+        raise ValueError("budget_slots must be positive")
+    dag_map = _normalize_dags(dags)
+    names = list(dag_map)
+    D = len(names)
+    if D == 0:
+        raise ValueError("plan_fleet needs at least one DAG")
+    w = np.array([float((weights or {}).get(n, 1.0)) for n in names])
+    if np.any(w <= 0):
+        raise ValueError("weights must be positive")
+    prio = np.array([int((priorities or {}).get(n, 0)) for n in names])
+    counters = stats if stats is not None else {}
+    counters.setdefault("batch_passes", 0)
+    counters.setdefault("allocator_calls", 0)
+    counters.setdefault("mapper_calls", 0)
+
+    # 1. the whole (dag x rate) slot surface, one array pass per DAG
+    grid = step * np.arange(1, int(max_rate / step) + 1)
+    slots = np.empty((D, len(grid)), dtype=np.int64)
+    for d, n in enumerate(names):
+        counters["batch_passes"] += 1
+        slots[d] = batch_slots(dag_map[n], grid, _models_for(models, n),
+                               allocator, clip_unsupportable=True)
+    caps = np.array([prefix_feasible_count(slots[d] <= budget_slots)
+                     for d in range(D)])
+
+    # 2. joint rate selection
+    if objective == "priority":
+        idx = np.full(D, -1, dtype=int)
+        residual = budget_slots
+        for p in sorted(set(prio), reverse=True):
+            tier = np.flatnonzero(prio == p)
+            if residual <= 0:
+                break
+            tier_idx = _plan_rates(grid, slots[tier], caps[tier],
+                                   w[tier], residual)
+            idx[tier] = tier_idx
+            residual -= _cost(slots[tier], tier_idx)
+    else:
+        use_w = w if objective == "weighted" else np.ones(D)
+        idx = _plan_rates(grid, slots, caps, use_w, budget_slots)
+
+    # 3. map each planned DAG onto its share of one common VM pool: §7.1
+    # acquisition per DAG (D3/D2/D1 sizes cover rho exactly), fleet-unique
+    # VM ids, and the §8.4 +1-slot retry on mapper fragmentation
+    pool: List[VM] = []
+    next_id = 0
+    entries: Dict[str, FleetEntry] = {}
+    order = sorted(range(D), key=lambda d: (-prio[d],
+                                            -(slots[d, idx[d]]
+                                              if idx[d] >= 0 else 0),
+                                            names[d]))
+    schedules: Dict[str, Optional[Schedule]] = {n: None for n in names}
+    for d in order:
+        name = names[d]
+        if idx[d] < 0 or mapper is None:
+            continue
+        omega = float(grid[idx[d]])
+        rho = int(slots[d, idx[d]])
+        subset = [VM(next_id + i, vm.num_slots, rack=vm.rack)
+                  for i, vm in enumerate(acquire_vms(rho, vm_sizes))]
+        next_id += len(subset)
+        lib = _models_for(models, name)
+        counters["allocator_calls"] += 1
+        sched = plan(dag_map[name], omega, lib, allocator=allocator,
+                     mapper=mapper, fixed_vms=subset, grow_fixed_vms=True)
+        # one mapper attempt per §8.4 retry (each retry adds one slot)
+        counters["mapper_calls"] += 1 + len(sched.vms) - len(subset)
+        schedules[name] = sched
+        next_id = max(vm.id for vm in sched.vms) + 1
+        pool.extend(sched.vms)
+    overflow = max(0, sum(vm.num_slots for vm in pool) - budget_slots)
+
+    # 4. per-DAG §8.5.2 predictions at the planned rates (sweep predictor)
+    for d, name in enumerate(names):
+        omega = float(grid[idx[d]]) if idx[d] >= 0 else 0.0
+        sched = schedules[name]
+        gi = prediction = None
+        if sched is not None:
+            gi = build_group_index(dag_map[name], sched.allocation,
+                                   sched.mapping, _models_for(models, name),
+                                   policy)
+            prediction = predict_resources_sweep(
+                gi, [omega], mapping=sched.mapping).at(0)
+        entries[name] = FleetEntry(
+            name=name, dag=dag_map[name], weight=float(w[d]),
+            priority=int(prio[d]), omega=omega, grid_index=int(idx[d]),
+            estimated_slots=int(slots[d, idx[d]]) if idx[d] >= 0 else 0,
+            schedule=sched, prediction=prediction, group_index=gi)
+    return FleetPlan(objective=objective, budget_slots=budget_slots,
+                     grid=grid, slots_matrix=slots, entries=entries,
+                     pool=pool, overflow_slots=overflow, policy=policy)
+
+
+def fleet_resource_surfaces(fleet: FleetPlan, models: ModelsArg,
+                            omegas: Optional[Sequence[float]] = None,
+                            policy: Optional[RoutingPolicy] = None
+                            ) -> Dict[str, ResourceSweep]:
+    """Per-DAG predicted CPU/mem surfaces over a rate sweep (defaults to the
+    plan's own grid up to each DAG's planned rate) — one array pass per DAG
+    via :func:`predict_resources_sweep`.  Uses the plan's cached
+    :class:`GroupIndex` unless a different routing ``policy`` is asked for."""
+    policy = policy or fleet.policy
+    out = {}
+    for name, e in fleet.entries.items():
+        if e.schedule is None:
+            continue
+        gi = e.group_index
+        if gi is None or policy is not fleet.policy:
+            gi = build_group_index(e.dag, e.schedule.allocation,
+                                   e.schedule.mapping,
+                                   _models_for(models, name), policy)
+        sweep = (np.asarray(omegas, dtype=float) if omegas is not None
+                 else fleet.grid[:e.grid_index + 1])
+        out[name] = predict_resources_sweep(gi, sweep,
+                                            mapping=e.schedule.mapping)
+    return out

@@ -10,12 +10,20 @@ The per-slot-group capacity rule is the paper's (§8.4.1): a group of ``q``
 threads of task ``t`` on one slot supports ``I_t(q)``; a task's capacity is
 the sum over its groups; e.g. 2+2+2+2+9 Azure-Table threads across 5 slots
 give ``4*I(2) + I(9)``.
+
+Everything rate-independent about a schedule is precomputed once into a
+:class:`GroupIndex`; the predictors are then pure array passes over it —
+:func:`predict_resources_sweep` evaluates the §8.5.2 CPU/mem surfaces for a
+whole rate sweep at once (``(S, K)`` / ``(V, K)``), and
+:func:`predict_max_rate_gi` reduces the peak-rate question to one min over
+groups (plus an :func:`effective_capacity_matrix` sweep when the §8.4.2
+oversubscription penalty makes capacity rate-dependent).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -142,13 +150,16 @@ def build_group_index(dag: Dataflow, alloc: Allocation,
 
 def effective_capacity_matrix(gi: GroupIndex, omegas: np.ndarray,
                               *, cpu_penalty: bool = CPU_OVERSUB_PENALTY,
-                              iters: int = 4) -> np.ndarray:
+                              iters: int = 8) -> np.ndarray:
     """Per-(group, rate) sustainable rate, vectorized over a rate sweep.
 
     The array form of :func:`effective_capacities`: base capacity is the
     model's ``I_t(q)`` per group; with ``cpu_penalty`` the §8.4.2 throttle is
     found by the same damped fixed point, but evaluated for every rate in
-    ``omegas`` at once (shape ``(G, K)``).
+    ``omegas`` at once (shape ``(G, K)``).  Each step averages the previous
+    estimate with the throttle target — the undamped update oscillates
+    between throttled and unthrottled whenever serving the *throttled* rate
+    fits the slot's core again (two tasks sharing one slot near saturation).
     """
     omegas = np.asarray(omegas, dtype=float)
     caps = np.repeat(gi.g_cap[:, None], len(omegas), axis=1)
@@ -165,7 +176,8 @@ def effective_capacity_matrix(gi: GroupIndex, omegas: np.ndarray,
         slot_cpu = np.zeros((n_slots, len(omegas)))
         np.add.at(slot_cpu, gi.g_slot, used)
         over = slot_cpu[gi.g_slot]
-        caps = np.where(over > 1.0 + 1e-9, base / over, base)
+        target = np.where(over > 1.0 + 1e-9, base / over, base)
+        caps = 0.5 * (caps + target)
     return caps
 
 
@@ -173,7 +185,7 @@ def effective_capacities(dag: Dataflow, alloc: Allocation,
                          mapping: ThreadMapping, models: ModelLibrary,
                          *, cpu_penalty: bool = CPU_OVERSUB_PENALTY,
                          omega: Optional[float] = None,
-                         policy=None, iters: int = 4
+                         policy=None, iters: int = 8
                          ) -> Dict[str, Dict[SlotId, float]]:
     """Per-(task, slot) sustainable rate.
 
@@ -219,9 +231,48 @@ def effective_capacities(dag: Dataflow, alloc: Allocation,
                 over = slot_cpu.get(slot, 0.0)
                 if over > 1.0 + 1e-9:
                     cap /= over
-                nxt[task][slot] = cap
+                # rate-scaled updates are damped like the matrix form (the
+                # raw update oscillates when the throttled rate fits the
+                # core again); the full-C target is constant, so the plain
+                # update reaches it exactly
+                if rates is None:
+                    nxt[task][slot] = cap
+                else:
+                    nxt[task][slot] = 0.5 * (caps[task][slot] + cap)
         caps = nxt
     return caps
+
+
+def predict_max_rate_gi(gi: GroupIndex, *,
+                        cpu_penalty: bool = CPU_OVERSUB_PENALTY,
+                        grid_points: int = 256) -> float:
+    """Largest DAG input rate Omega* a prebuilt :class:`GroupIndex` sustains.
+
+    Per group the demand is ``frac * beta * Omega`` and the binding
+    constraint ``demand <= capacity``; the worst group over all tasks caps
+    Omega.  Routing policy is baked into ``g_frac`` (threads-proportional for
+    shuffle, capacity-proportional for slot-aware), so one min over groups
+    covers both cases.
+
+    With ``cpu_penalty`` the capacity itself depends on the operating rate
+    (§8.4.2: rate-scaled CPU draw of co-located groups throttles the slot),
+    so the closed form becomes a feasibility sweep: evaluate
+    :func:`effective_capacity_matrix` over a rate grid up to the penalty-free
+    optimum in one array pass and keep the largest rate every group serves.
+    """
+    demand = gi.g_frac * gi.betas[gi.g_task]     # per unit DAG rate
+    binding = demand > 0
+    if not np.any(binding):
+        return float("inf")
+    omega_free = float(np.min(gi.g_cap[binding] / demand[binding]))
+    if not cpu_penalty or omega_free <= 0:
+        return omega_free
+    omegas = np.linspace(0.0, omega_free, grid_points + 1)[1:]
+    caps = effective_capacity_matrix(gi, omegas, cpu_penalty=True)
+    ok = np.all(demand[binding, None] * omegas[None, :]
+                <= caps[binding] * (1 + 1e-9), axis=0)
+    n = int(np.flatnonzero(~ok)[0]) if not ok.all() else len(ok)
+    return float(omegas[n - 1]) if n else 0.0
 
 
 def predict_max_rate(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,
@@ -233,27 +284,12 @@ def predict_max_rate(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,
     Task rates are linear in Omega (``rate_t = beta_t * Omega``), so under
     slot-aware routing the binding constraint per task is its total capacity;
     under shuffle routing it is the *worst* group, which receives threads-
-    proportional input regardless of its capacity.
+    proportional input regardless of its capacity.  With ``cpu_penalty`` the
+    §8.4.2 throttle is evaluated at the candidate rate (rate-scaled CPU
+    draw), not the groups' full ``C(q)`` — see :func:`predict_max_rate_gi`.
     """
-    betas = dag.get_rates(1.0)
-    caps = effective_capacities(dag, alloc, mapping, models,
-                                cpu_penalty=cpu_penalty)
-    groups = slot_groups(mapping, alloc)
-    omega_star = float("inf")
-    for task, g in groups.items():
-        beta = betas[task]
-        if beta <= 0 or not g:
-            continue
-        total_threads = sum(g.values())
-        total_cap = sum(caps[task].values())
-        if policy is RoutingPolicy.SLOT_AWARE:
-            omega_star = min(omega_star, total_cap / beta)
-        else:
-            for slot, q in g.items():
-                share = q / total_threads
-                if share > 0:
-                    omega_star = min(omega_star, caps[task][slot] / (share * beta))
-    return omega_star
+    gi = build_group_index(dag, alloc, mapping, models, policy)
+    return predict_max_rate_gi(gi, cpu_penalty=cpu_penalty)
 
 
 @dataclasses.dataclass
@@ -296,3 +332,77 @@ def predict_resources(dag: Dataflow, alloc: Allocation, mapping: ThreadMapping,
         vm_cpu[vm.id] = sum(slot_cpu[s] for s in vm.slot_ids())
         vm_mem[vm.id] = sum(slot_mem[s] for s in vm.slot_ids())
     return ResourcePrediction(omega, slot_cpu, slot_mem, vm_cpu, vm_mem)
+
+
+@dataclasses.dataclass
+class ResourceSweep:
+    """Predicted CPU%/mem% surfaces over a whole rate sweep.
+
+    ``slot_cpu``/``slot_mem`` have shape ``(S, K)`` (row order ``slots``);
+    ``vm_cpu``/``vm_mem`` have shape ``(V, K)`` (row order ``vm_ids``).
+    """
+
+    omegas: np.ndarray
+    slots: List[SlotId]
+    vm_ids: List[int]
+    slot_cpu: np.ndarray
+    slot_mem: np.ndarray
+    vm_cpu: np.ndarray
+    vm_mem: np.ndarray
+
+    def at(self, k: int) -> ResourcePrediction:
+        """Dict view of one sweep column (the scalar prediction's shape)."""
+        return ResourcePrediction(
+            float(self.omegas[k]),
+            {s: float(self.slot_cpu[i, k]) for i, s in enumerate(self.slots)},
+            {s: float(self.slot_mem[i, k]) for i, s in enumerate(self.slots)},
+            {v: float(self.vm_cpu[i, k]) for i, v in enumerate(self.vm_ids)},
+            {v: float(self.vm_mem[i, k]) for i, v in enumerate(self.vm_ids)})
+
+
+def predict_resources_sweep(gi: GroupIndex, omegas: Sequence[float],
+                            *, mapping: Optional[ThreadMapping] = None
+                            ) -> ResourceSweep:
+    """Vectorized §8.5.2 resource prediction: every rate in ``omegas`` in one
+    array pass over a prebuilt :class:`GroupIndex`.
+
+    A group of ``q`` threads receiving ``r <= I(q)`` is charged
+    ``C(q) * r / I(q)`` (the paper's proportional scale-down), full
+    ``C(q)/M(q)`` at or above peak — identical to per-rate
+    :func:`predict_resources` calls, as one ``(G, K)`` pass.
+
+    ``mapping`` (optional) extends the reported rows to the mapping's full
+    slot/VM inventory — unused slots predict 0.0, matching the scalar path;
+    without it only slots hosting threads appear.
+    """
+    omegas = np.asarray(omegas, dtype=float)
+    K = len(omegas)
+    slots = list(gi.slots)
+    slot_of = {s: i for i, s in enumerate(slots)}
+    g_slot = gi.g_slot
+    if mapping is not None:
+        extra = [s for s in mapping.slots() if s not in slot_of]
+        for s in extra:
+            slot_of[s] = len(slots)
+            slots.append(s)
+    incoming = gi.g_frac[:, None] * gi.betas[gi.g_task][:, None] \
+        * omegas[None, :]
+    safe_cap = np.where(gi.g_cap > 0, gi.g_cap, 1.0)
+    frac = np.where(gi.g_cap[:, None] > 0,
+                    np.minimum(1.0, incoming / safe_cap[:, None]), 1.0)
+    slot_cpu = np.zeros((len(slots), K))
+    slot_mem = np.zeros((len(slots), K))
+    np.add.at(slot_cpu, g_slot, gi.g_cpu[:, None] * frac)
+    np.add.at(slot_mem, g_slot, gi.g_mem[:, None] * frac)
+    if mapping is not None:
+        vm_ids = [vm.id for vm in mapping.vms]
+    else:
+        vm_ids = sorted({s.vm for s in slots})
+    vm_of = {v: i for i, v in enumerate(vm_ids)}
+    vm_rows = np.array([vm_of[s.vm] for s in slots], dtype=int)
+    vm_cpu = np.zeros((len(vm_ids), K))
+    vm_mem = np.zeros((len(vm_ids), K))
+    np.add.at(vm_cpu, vm_rows, slot_cpu)
+    np.add.at(vm_mem, vm_rows, slot_mem)
+    return ResourceSweep(omegas, slots, vm_ids, slot_cpu, slot_mem,
+                         vm_cpu, vm_mem)

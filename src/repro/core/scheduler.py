@@ -13,7 +13,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .allocation import ALLOCATORS, Allocation
+from .allocation import ALLOCATORS, Allocation, UnsupportableRateError
 from .dag import Dataflow
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
                       Mapping, VM, acquire_vms)
@@ -76,31 +76,43 @@ class Schedule:
 def plan(dag: Dataflow, omega: float, models: ModelLibrary,
          *, allocator: str = "mba", mapper: str = "sam",
          vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
-         fixed_vms: Optional[Sequence[VM]] = None) -> Schedule:
+         fixed_vms: Optional[Sequence[VM]] = None,
+         grow_fixed_vms: bool = False) -> Schedule:
     """Plan a schedule for ``dag`` at input rate ``omega``.
 
     ``fixed_vms`` pins the cluster (the §8.5 five-D3-VM experiments);
     otherwise VMs are acquired per §7.1 for the allocation's slot estimate,
-    growing one slot at a time if the mapper reports fragmentation.
+    growing one slot at a time if the mapper reports fragmentation.  With
+    ``grow_fixed_vms`` a pinned cluster applies the same §8.4 retry rule by
+    appending fresh 1-slot VMs (ids above the pinned set) instead of
+    propagating the mapper failure — the fleet planner's per-DAG path, which
+    keeps VM ids unique across a shared pool.
     """
     alloc = ALLOCATORS[allocator](dag, omega, models)
     rho = alloc.slots
     map_fn = MAPPERS[mapper]
+    fixed = fixed_vms is not None
 
-    if fixed_vms is not None:
+    if fixed and not grow_fixed_vms:
         vms = list(fixed_vms)
         mapping = map_fn(dag, alloc, vms, models)
-        total = sum(vm.num_slots for vm in vms)
         return Schedule(dag, omega, alloc, vms, mapping, allocator, mapper,
-                        estimated_slots=rho, acquired_slots=total)
+                        estimated_slots=rho,
+                        acquired_slots=sum(vm.num_slots for vm in vms))
 
+    # one §8.4 retry loop for both acquisition modes; they differ only in
+    # how the next VM list grows by one slot
+    vms = list(fixed_vms) if fixed else acquire_vms(rho, vm_sizes)
     last_err: Optional[Exception] = None
     for extra in range(MAX_EXTRA_SLOTS + 1):
-        vms = acquire_vms(rho + extra, vm_sizes)
         try:
             mapping = map_fn(dag, alloc, vms, models)
         except InsufficientResourcesError as err:
             last_err = err
+            if fixed:
+                vms = vms + [VM(max((vm.id for vm in vms), default=-1) + 1, 1)]
+            else:
+                vms = acquire_vms(rho + extra + 1, vm_sizes)
             continue
         return Schedule(dag, omega, alloc, vms, mapping, allocator, mapper,
                         estimated_slots=rho,
@@ -180,7 +192,11 @@ def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
 
     def plan_fits(omega: float) -> bool:
         counters["allocator_calls"] += 1
-        alloc = ALLOCATORS[allocator](dag, omega, models)
+        try:
+            alloc = ALLOCATORS[allocator](dag, omega, models)
+        except UnsupportableRateError:
+            # no thread count supports this rate: it cannot fit any budget
+            return False
         if alloc.slots > budget_slots:
             return False
         counters["mapper_calls"] += 1
@@ -203,7 +219,8 @@ def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
 
     grid = step * np.arange(1, int(max_rate / step) + 1)
     counters["batch_passes"] += 1
-    rho_ok = batch_slots(dag, grid, models, allocator) <= budget_slots
+    rho_ok = batch_slots(dag, grid, models, allocator,
+                         clip_unsupportable=True) <= budget_slots
     # The scan stops at the FIRST rate that does not fit: only the leading
     # all-feasible prefix is eligible, even if a later rate fits again.
     n = prefix_feasible_count(rho_ok)

@@ -9,7 +9,11 @@ overloaded, and the stability test is the paper's latency-slope criterion.
 The simulator is what the benchmark harness calls the *actual* behaviour.  It
 deliberately contains effects the schedule planner does NOT model (routing
 skew, oversubscription throttling, network hops), which is what produces the
-planned-vs-actual gaps reported in Figs. 7–13.
+planned-vs-actual gaps reported in Figs. 7–13.  Hop latency between two
+tasks is the *flow-weighted* expectation over their (src group, dst group)
+pairs — each pair weighted by the source group's routed fraction times the
+destination group's routing fraction — so shuffle and slot-aware routing see
+different expected hops for the same mapping.
 
 Internally the engine is fully vectorized: per-group queues and capacities
 live in flat numpy arrays keyed by a precomputed :class:`GroupIndex`, with the
@@ -74,30 +78,38 @@ class DataflowSimulator:
         self._sink_rows = [self.gi.task_of[t.name] for t in dag.sinks()]
 
     # -- helpers -------------------------------------------------------------
-    def _hop_latency(self, src_task: str, dst_task: str) -> float:
-        """Expected network hop latency between two tasks' thread groups."""
-        src_slots = list(self.groups.get(src_task, {}))
-        dst_slots = list(self.groups.get(dst_task, {}))
-        if not src_slots or not dst_slots:
+    def _hop_latency(self, src_row: int, dst_row: int) -> float:
+        """Expected network hop latency between two tasks' thread groups,
+        weighted by the tuple flow each (src group, dst group) pair actually
+        carries: the source group's routed fraction times the destination
+        group's routing fraction (both rate-independent under either policy).
+
+        An unweighted average would count a 9-thread destination group the
+        same as a 2-thread one; with flow weights, shuffle and slot-aware
+        routing see different expected hop latencies for the same mapping.
+        """
+        gi = self.gi
+        sl_s, sl_d = gi.task_slice(src_row), gi.task_slice(dst_row)
+        if sl_s.start == sl_s.stop or sl_d.start == sl_d.stop:
             return 0.0
-        total, n = 0.0, 0
-        for a in src_slots:
-            for b in dst_slots:
-                if a == b:
-                    total += HOP_SAME_SLOT
-                elif a.vm == b.vm:
-                    total += HOP_SAME_VM
-                else:
-                    total += HOP_CROSS_VM
-                n += 1
-        return total / n
+        w = gi.g_frac[sl_s, None] * gi.g_frac[None, sl_d]
+        vm_s = np.array([gi.slots[s].vm for s in gi.g_slot[sl_s]])
+        vm_d = np.array([gi.slots[s].vm for s in gi.g_slot[sl_d]])
+        hop = np.where(gi.g_slot[sl_s, None] == gi.g_slot[None, sl_d],
+                       HOP_SAME_SLOT,
+                       np.where(vm_s[:, None] == vm_d[None, :],
+                                HOP_SAME_VM, HOP_CROSS_VM))
+        total_w = w.sum()
+        if total_w <= 0:        # degenerate zero-fraction groups: fall back
+            return float(hop.mean())
+        return float((w * hop).sum() / total_w)
 
     def _edge_hop_latencies(self) -> List[List[float]]:
         """Per task row, hop latency of each in-edge (rate-independent)."""
         gi = self.gi
         hops: List[List[float]] = []
         for row, name in enumerate(gi.tasks):
-            hops.append([self._hop_latency(gi.tasks[src], name)
+            hops.append([self._hop_latency(src, row)
                          for src, _ in gi.in_edges[row]])
         return hops
 

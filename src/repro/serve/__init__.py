@@ -1,4 +1,5 @@
 """Serving substrate: continuous-batching engine + model-driven planner."""
 
 from .engine import ServeEngine, Request
-from .planner import serving_perf_models, plan_serving
+from .planner import (ServingWorkload, plan_serving, plan_serving_fleet,
+                      serving_dag, serving_perf_models)

@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple
 
 from ..configs.base import ModelConfig
 from ..core.dag import Dataflow
+from ..core.fleet import FleetPlan, plan_fleet
 from ..core.perfmodel import ModelLibrary, ModelPoint, PerfModel
 from ..core.scheduler import Schedule, plan
 from ..distributed.roofline import stage_hbm_fraction, stage_tokens_per_sec
@@ -62,8 +63,8 @@ def serving_perf_models(cfg: ModelConfig, *, prompt_len: int, gen_len: int,
     return lib
 
 
-def serving_dag(gen_len: int) -> Dataflow:
-    df = Dataflow("serving")
+def serving_dag(gen_len: int, name: str = "serving") -> Dataflow:
+    df = Dataflow(name)
     df.add_task("src", "source", is_source=True)
     df.add_task("prefill", "prefill")
     df.add_task("decode", "decode")
@@ -110,3 +111,50 @@ def plan_serving(cfg: ModelConfig, *, request_rate: float, prompt_len: int,
         decode_chips=alloc["decode"].threads,
         hosts=len(schedule.vms),
     )
+
+
+@dataclasses.dataclass
+class ServingWorkload:
+    """One tenant's serving demand for the fleet planner."""
+
+    name: str
+    cfg: ModelConfig
+    prompt_len: int
+    gen_len: int
+    batch: int = 32
+    weight: float = 1.0
+    priority: int = 0
+
+
+def plan_serving_fleet(workloads: Tuple[ServingWorkload, ...] | list,
+                       *, budget_hosts: int, objective: str = "max_min",
+                       allocator: str = "mba", mapper: Optional[str] = "sam",
+                       step: float = 0.25, max_rate: float = 64.0
+                       ) -> FleetPlan:
+    """Share one TPU host budget across many serving workloads.
+
+    Each workload gets its own analytic stage PerfModels and serving DAG
+    (per-DAG model libraries — "prefill" means something different per
+    arch / context length); the fleet planner then jointly picks the
+    admitted request rate per workload under ``objective`` exactly as for
+    stream DAGs: hosts are slots, chips are threads, and gang-scheduling a
+    stage's chips onto exclusive hosts is SAM on an ICI island.
+    """
+    dags: Dict[str, Dataflow] = {}
+    libs: Dict[str, ModelLibrary] = {}
+    weights: Dict[str, float] = {}
+    priorities: Dict[str, int] = {}
+    for wl in workloads:
+        if wl.name in dags:
+            raise ValueError(f"duplicate workload name {wl.name!r}")
+        dags[wl.name] = serving_dag(wl.gen_len, name=wl.name)
+        libs[wl.name] = serving_perf_models(
+            wl.cfg, prompt_len=wl.prompt_len, gen_len=wl.gen_len,
+            batch=wl.batch)
+        weights[wl.name] = wl.weight
+        priorities[wl.name] = wl.priority
+    return plan_fleet(dags, libs, budget_slots=budget_hosts,
+                      objective=objective, weights=weights,
+                      priorities=priorities, allocator=allocator,
+                      mapper=mapper, step=step, max_rate=max_rate,
+                      vm_sizes=(4, 2, 1))

@@ -7,13 +7,46 @@ except ImportError:        # property tests skip; plain tests still run
     from _hypothesis_fallback import hypothesis, st
 import pytest
 
-from repro.core import (ALL_DAGS, MICRO_DAGS, allocate_lsa, allocate_mba,
-                        linear_dag, paper_library)
+from repro.core import (ALL_DAGS, MICRO_DAGS, ModelLibrary, PAPER_MODELS,
+                        PerfModel, UnsupportableRateError, allocate_lsa,
+                        allocate_mba, linear_dag, paper_library)
+from repro.core.dag import Dataflow
 
 
 @pytest.fixture(scope="module")
 def lib():
     return paper_library()
+
+
+def dead_task_setup():
+    """A task whose profile supports no rate at all: every positive rate is
+    unsupportable for both allocators."""
+    models = ModelLibrary({
+        "dead": PerfModel.from_points("dead", {1: (0.0, 0.5, 0.5)}),
+        "source": PAPER_MODELS["source"],
+        "sink": PAPER_MODELS["sink"],
+    })
+    df = Dataflow("deadflow")
+    df.add_task("src", "source", is_source=True)
+    df.add_task("d", "dead")
+    df.add_task("snk", "sink", is_sink=True)
+    df.add_edge("src", "d")
+    df.add_edge("d", "snk")
+    return df, models
+
+
+@pytest.mark.parametrize("allocate", [allocate_lsa, allocate_mba])
+def test_unsupportable_rate_raises_typed_error(allocate):
+    """Not a bare assert (silently skipped under python -O) — a typed
+    RuntimeError planners can catch, like the mapper's
+    InsufficientResourcesError."""
+    dag, models = dead_task_setup()
+    with pytest.raises(UnsupportableRateError) as exc:
+        allocate(dag, 50.0, models)
+    assert isinstance(exc.value, RuntimeError)
+    assert not isinstance(exc.value, AssertionError)
+    assert exc.value.task == "d"
+    assert exc.value.rate == pytest.approx(50.0)
 
 
 def test_lsa_blob_paper_numbers(lib):

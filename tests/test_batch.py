@@ -14,9 +14,11 @@ try:
 except ImportError:        # property tests skip; plain tests still run
     from _hypothesis_fallback import hypothesis, st
 
-from repro.core import (ALL_DAGS, MICRO_DAGS, DataflowSimulator, batch_allocate,
-                        batch_feasible, batch_slots, allocate_lsa, allocate_mba,
-                        linear_dag, paper_library, plan)
+from repro.core import (ALL_DAGS, MICRO_DAGS, DataflowSimulator,
+                        UnsupportableRateError, batch_allocate,
+                        batch_feasible, batch_slots, allocate_lsa,
+                        allocate_mba, linear_dag, paper_library, plan)
+from repro.core.batch import bisect_largest_true, prefix_feasible_count
 from repro.core.perfmodel import PAPER_MODELS
 from repro.core.scheduler import max_planned_rate
 
@@ -127,6 +129,126 @@ def test_bisect_zero_when_nothing_fits(lib):
         assert max_planned_rate(grid_dag(), lib, allocator="mba",
                                 mapper="sam", budget_slots=1,
                                 method=method) == 0.0
+
+
+# -- unsupportable rates through the batch path --------------------------------
+
+def test_batch_unsupportable_raises_typed_error():
+    """The vectorized MBA/LSA inner loops raise the scalar allocators' typed
+    error, not a bare AssertionError."""
+    from test_allocation import dead_task_setup
+    dag, models = dead_task_setup()
+    for algo in ("lsa", "mba"):
+        with pytest.raises(UnsupportableRateError) as exc:
+            batch_allocate(dag, [10.0, 20.0], models, algo)
+        # same metadata as the scalar path: task name + full task rate
+        assert exc.value.task == "d"
+        assert exc.value.rate == pytest.approx(10.0)
+
+
+def test_batch_clip_unsupportable_marks_infeasible():
+    """clip_unsupportable turns unsupportable cells into never-fitting slot
+    counts instead of aborting the whole grid pass."""
+    from test_allocation import dead_task_setup
+    dag, models = dead_task_setup()
+    slots = batch_slots(dag, [10.0, 20.0], models, "mba",
+                        clip_unsupportable=True)
+    assert (slots > 10**15).all()          # no finite budget fits
+
+
+def test_batch_feasible_clips_degenerate_dag_by_default():
+    """One degenerate DAG must not abort the whole fleet's masks — it just
+    reads as infeasible at every rate."""
+    from test_allocation import dead_task_setup
+    dag, models = dead_task_setup()
+    masks = batch_feasible({"dead": dag}, [10.0, 20.0], models,
+                           budget_slots=10 ** 6)
+    assert not masks["dead"].any()
+
+
+def test_near_degenerate_profile_clamps_instead_of_wrapping():
+    """A tiny-but-positive peak rate demands astronomically many threads and
+    slots; the int64 casts must clamp, not wrap negative (a wrapped slot
+    count would read as feasible under ANY budget)."""
+    from repro.core import ModelLibrary, PerfModel
+    from repro.core.perfmodel import PAPER_MODELS
+    from repro.core.dag import Dataflow
+
+    models = ModelLibrary({
+        "tiny": PerfModel.from_points("tiny", {1: (1e-19, 0.5, 0.5)}),
+        "source": PAPER_MODELS["source"], "sink": PAPER_MODELS["sink"]})
+    df = Dataflow("tinyflow")
+    df.add_task("src", "source", is_source=True)
+    df.add_task("t", "tiny")
+    df.add_task("snk", "sink", is_sink=True)
+    df.add_edge("src", "t")
+    df.add_edge("t", "snk")
+    for algo, scalar in (("lsa", allocate_lsa), ("mba", allocate_mba)):
+        ba = batch_allocate(df, [10.0], models, algo)
+        assert (ba.threads >= 0).all()
+        assert (ba.slots > 10 ** 15).all()
+        masks = batch_feasible({"tiny": df}, [10.0], models,
+                               budget_slots=10 ** 6, algorithm=algo)
+        assert not masks["tiny"].any()
+        # the scalar allocators terminate on the same profile (floor
+        # arithmetic — repeated subtraction of 1e-19 would never end) and
+        # agree the rate needs an absurd slot count
+        ref = scalar(df, 10.0, models)
+        assert ref.slots > 10 ** 15
+    for method in ("scan", "bisect"):
+        assert max_planned_rate(df, models, allocator="mba", mapper="sam",
+                                budget_slots=20, method=method) == 0.0
+
+
+def test_scan_and_bisect_agree_on_unsupportable_rates(lib):
+    """Satellite acceptance: both max_planned_rate methods report 0.0 when
+    no grid rate is allocatable, instead of crashing (scan) or aborting the
+    vectorized pass (bisect)."""
+    from test_allocation import dead_task_setup
+    dag, models = dead_task_setup()
+    rates = {m: max_planned_rate(dag, models, allocator="mba", mapper="sam",
+                                 budget_slots=20, method=m)
+             for m in ("scan", "bisect")}
+    assert rates["scan"] == rates["bisect"] == 0.0
+
+
+# -- bisection / prefix-count edge cases ---------------------------------------
+
+def test_bisect_largest_true_edge_cases():
+    def pred_of(mask):
+        return lambda i: mask[i]
+
+    assert bisect_largest_true(pred_of([]), 0) == -1            # empty grid
+    assert bisect_largest_true(pred_of([False] * 5), 5) == -1   # all False
+    assert bisect_largest_true(pred_of([True]), 1) == 0         # single True
+    assert bisect_largest_true(pred_of([False]), 1) == -1
+    assert bisect_largest_true(pred_of([True] * 7), 7) == 6     # all True
+    for n_true in range(1, 7):
+        mask = [True] * n_true + [False] * (7 - n_true)
+        assert bisect_largest_true(pred_of(mask), 7) == n_true - 1
+
+
+def test_bisect_largest_true_lo_known_true_skips_first_probe():
+    """lo_known_true trusts the caller: index 0 is never probed, and with an
+    (invariant-violating) all-False predicate the search still terminates,
+    answering 0."""
+    probed = []
+
+    def pred(i):
+        probed.append(i)
+        return False
+
+    assert bisect_largest_true(pred, 8, lo_known_true=True) == 0
+    assert 0 not in probed
+
+
+def test_prefix_feasible_count_masks():
+    assert prefix_feasible_count(np.array([], dtype=bool)) == 0
+    assert prefix_feasible_count(np.ones(9, dtype=bool)) == 9
+    assert prefix_feasible_count(np.zeros(9, dtype=bool)) == 0
+    # stops at the FIRST infeasible rate even if later ones fit again
+    assert prefix_feasible_count(np.array([True, False, True])) == 1
+    assert prefix_feasible_count(np.array([True, True, False, False])) == 2
 
 
 # -- sweep simulator vs per-rate runs -----------------------------------------

@@ -1,0 +1,253 @@
+"""Fleet planner: joint rates vs brute-force budget partitions, the sweep
+predictor vs per-rate predictions, and shared-pool accounting.
+
+The brute force enumerates every way to split the slot budget across the
+DAGs, gives each DAG its §8.5 scan-optimal rate for its share, and compares
+the fleet planner's joint result against the best split — the planner must
+match while doing only one vectorized grid pass per DAG.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (MICRO_DAGS, RoutingPolicy, batch_slots,
+                        build_group_index, diamond_dag, linear_dag,
+                        paper_library, plan, plan_fleet, predict_resources,
+                        predict_resources_sweep, fleet_resource_surfaces,
+                        star_dag, traffic_dag)
+from repro.core.batch import prefix_feasible_count
+
+STEP = 10.0
+MAX_RATE = 1000.0
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return paper_library()
+
+
+def _grid():
+    return STEP * np.arange(1, int(MAX_RATE / STEP) + 1)
+
+
+def _best_rate_by_budget(dag, lib, budget):
+    """R[b] = the §8.5 scan answer for a dedicated budget of b slots
+    (largest leading-prefix rate whose slot estimate fits b)."""
+    grid = _grid()
+    slots = batch_slots(dag, grid, lib, "mba", clip_unsupportable=True)
+    out = np.zeros(budget + 1)
+    for b in range(budget + 1):
+        n = prefix_feasible_count(slots <= b)
+        out[b] = grid[n - 1] if n > 0 else 0.0
+    return out
+
+
+def _brute_force_max_min(dags, lib, budget):
+    """Lexicographically best sorted rate vector over ALL budget splits."""
+    tables = [_best_rate_by_budget(d, lib, budget) for d in dags.values()]
+    best = None
+    for split in itertools.product(range(budget + 1), repeat=len(tables)):
+        if sum(split) > budget:
+            continue
+        rates = tuple(sorted(t[b] for t, b in zip(tables, split)))
+        if best is None or rates > best:
+            best = rates
+    return best
+
+
+FLEETS = [
+    ({"linear": linear_dag(), "diamond": diamond_dag()}, 12),
+    ({"linear": linear_dag(), "diamond": diamond_dag(),
+      "star": star_dag()}, 8),
+    ({"linear": linear_dag(), "diamond": diamond_dag(),
+      "star": star_dag()}, 17),
+    ({"linear": linear_dag(), "diamond": diamond_dag(), "star": star_dag(),
+      "traffic": traffic_dag()}, 14),
+]
+
+
+@pytest.mark.parametrize("dags,budget", FLEETS,
+                         ids=[f"{len(d)}dags-{b}slots" for d, b in FLEETS])
+def test_max_min_matches_brute_force_partition(lib, dags, budget):
+    """Acceptance: the joint planner's max-min rates equal the best possible
+    dedicated-budget split (2-4 DAG fleets on the seed models)."""
+    fp = plan_fleet(dags, lib, budget_slots=budget, objective="max_min",
+                    mapper=None, step=STEP, max_rate=MAX_RATE)
+    got = tuple(sorted(e.omega for e in fp.entries.values()))
+    assert got == _brute_force_max_min(dags, lib, budget)
+    assert fp.total_estimated_slots <= budget
+
+
+def test_weighted_min_ratio_matches_brute_force(lib):
+    """The weighted objective maximizes the worst rate/weight ratio over all
+    budget splits; equal weights reduce to max_min exactly."""
+    dags = {"linear": linear_dag(), "diamond": diamond_dag(),
+            "star": star_dag()}
+    weights = {"linear": 2.0, "diamond": 1.0, "star": 1.0}
+    budget = 20
+    fp = plan_fleet(dags, lib, budget_slots=budget, objective="weighted",
+                    weights=weights, mapper=None,
+                    step=STEP, max_rate=MAX_RATE)
+    got_min = min(e.omega / weights[n] for n, e in fp.entries.items())
+    tables = {n: _best_rate_by_budget(d, lib, budget)
+              for n, d in dags.items()}
+    best_min = 0.0
+    names = list(dags)
+    for split in itertools.product(range(budget + 1), repeat=len(names)):
+        if sum(split) > budget:
+            continue
+        best_min = max(best_min, min(tables[n][b] / weights[n]
+                                     for n, b in zip(names, split)))
+    assert got_min == pytest.approx(best_min)
+
+    eq = plan_fleet(dags, lib, budget_slots=budget, objective="weighted",
+                    mapper=None, step=STEP, max_rate=MAX_RATE)
+    mm = plan_fleet(dags, lib, budget_slots=budget, objective="max_min",
+                    mapper=None, step=STEP, max_rate=MAX_RATE)
+    assert {n: e.omega for n, e in eq.entries.items()} == \
+        {n: e.omega for n, e in mm.entries.items()}
+
+
+def test_priority_tiers_and_preemption_order(lib):
+    """Strict tiers: the top tier gets its solo optimum, the bottom tier is
+    preempted first when the budget is tight."""
+    dags = {"linear": linear_dag(), "diamond": diamond_dag(),
+            "star": star_dag()}
+    prios = {"linear": 2, "diamond": 1, "star": 0}
+    budget = 12
+    fp = plan_fleet(dags, lib, budget_slots=budget, objective="priority",
+                    priorities=prios, mapper=None,
+                    step=STEP, max_rate=MAX_RATE)
+    solo = _best_rate_by_budget(dags["linear"], lib, budget)[budget]
+    assert fp.entries["linear"].omega == solo
+    used = fp.entries["linear"].estimated_slots
+    solo_diamond = _best_rate_by_budget(dags["diamond"], lib,
+                                        budget)[budget - used]
+    assert fp.entries["diamond"].omega == solo_diamond
+    # whatever is left goes to the lowest tier
+    assert fp.entries["star"].omega <= fp.entries["diamond"].omega
+    order = fp.preemption_order()
+    running = [n for n, e in fp.entries.items() if e.omega > 0]
+    assert order[0] == "star" if "star" in running else True
+    assert order[-1] == "linear"
+
+
+def test_fleet_mapping_shares_one_pool(lib):
+    """Full pipeline: per-DAG schedules on fleet-unique VMs, acquisition
+    close to the planning budget, §8.5.2 predictions attached."""
+    dags = {n: mk() for n, mk in MICRO_DAGS.items()}
+    stats = {}
+    fp = plan_fleet(dags, lib, budget_slots=24, objective="max_min",
+                    stats=stats, step=STEP, max_rate=MAX_RATE)
+    assert stats["batch_passes"] == len(dags)
+    # one scalar allocator call per mapping attempt, a handful total —
+    # nothing like the O(rate/step) §8.5 scan
+    assert stats["allocator_calls"] <= 3 * len(dags)
+    all_vm_ids = [vm.id for e in fp.entries.values() if e.schedule
+                  for vm in e.schedule.vms]
+    assert len(all_vm_ids) == len(set(all_vm_ids))       # fleet-unique ids
+    assert fp.total_estimated_slots <= 24
+    assert fp.total_acquired_slots <= 24 + 2 * len(dags)  # §8.4-style extras
+    assert fp.overflow_slots == max(0, fp.total_acquired_slots - 24)
+    for e in fp.entries.values():
+        assert e.schedule is not None
+        assert e.schedule.omega == e.omega
+        assert e.prediction is not None
+        # the prediction covers exactly this DAG's share of the pool
+        assert set(e.prediction.vm_cpu) == {vm.id for vm in e.schedule.vms}
+    # fleet-level per-VM report covers the whole pool's used VMs
+    assert set(fp.vm_cpu) == set(all_vm_ids)
+
+
+def test_per_dag_model_libraries(lib):
+    dags = {"linear": linear_dag(), "diamond": diamond_dag()}
+    fp = plan_fleet(dags, {"linear": lib, "diamond": lib}, budget_slots=12,
+                    objective="max_min", mapper=None,
+                    step=STEP, max_rate=MAX_RATE)
+    shared = plan_fleet(dags, lib, budget_slots=12, objective="max_min",
+                        mapper=None, step=STEP, max_rate=MAX_RATE)
+    assert {n: e.omega for n, e in fp.entries.items()} == \
+        {n: e.omega for n, e in shared.entries.items()}
+
+
+def test_fleet_argument_validation(lib):
+    dags = {"linear": linear_dag()}
+    with pytest.raises(ValueError):
+        plan_fleet(dags, lib, budget_slots=10, objective="nope")
+    with pytest.raises(ValueError):
+        plan_fleet(dags, lib, budget_slots=0)
+    with pytest.raises(ValueError):
+        plan_fleet({}, lib, budget_slots=10)
+    with pytest.raises(ValueError):
+        plan_fleet(dags, lib, budget_slots=10, weights={"linear": -1.0})
+
+
+# -- vectorized §8.5.2 predictor vs per-rate predictions ----------------------
+
+@pytest.mark.parametrize("policy", [RoutingPolicy.SHUFFLE,
+                                    RoutingPolicy.SLOT_AWARE])
+def test_predict_resources_sweep_matches_scalar(lib, policy):
+    """Acceptance: the (S, K)/(V, K) surfaces equal per-rate
+    predict_resources to 1e-12 on a 50-point grid."""
+    for mk in (linear_dag, star_dag):
+        dag = mk()
+        s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+        gi = build_group_index(dag, s.allocation, s.mapping, lib, policy)
+        omegas = np.linspace(2.0, 150.0, 50)
+        sweep = predict_resources_sweep(gi, omegas, mapping=s.mapping)
+        assert sweep.slot_cpu.shape == (len(sweep.slots), 50)
+        assert sweep.vm_cpu.shape == (len(sweep.vm_ids), 50)
+        assert set(sweep.slots) == set(s.mapping.slots())
+        for k in range(50):
+            ref = predict_resources(dag, s.allocation, s.mapping, lib,
+                                    float(omegas[k]), policy)
+            col = sweep.at(k)
+            for slot in ref.slot_cpu:
+                assert col.slot_cpu[slot] == pytest.approx(
+                    ref.slot_cpu[slot], rel=1e-12, abs=1e-12)
+                assert col.slot_mem[slot] == pytest.approx(
+                    ref.slot_mem[slot], rel=1e-12, abs=1e-12)
+            for vm in ref.vm_cpu:
+                assert col.vm_cpu[vm] == pytest.approx(
+                    ref.vm_cpu[vm], rel=1e-12, abs=1e-12)
+                assert col.vm_mem[vm] == pytest.approx(
+                    ref.vm_mem[vm], rel=1e-12, abs=1e-12)
+
+
+def test_plan_serving_fleet_objectives():
+    """The serving wrapper: per-workload model libraries + DAGs through
+    every fleet objective on one host budget."""
+    from repro.configs import get_config
+    from repro.serve import ServingWorkload, plan_serving_fleet
+
+    cfg = get_config("qwen2.5-32b")
+    wls = [ServingWorkload("chat", cfg, prompt_len=2048, gen_len=256,
+                           weight=2.0, priority=1),
+           ServingWorkload("code", cfg, prompt_len=4096, gen_len=512)]
+    for objective in ("max_min", "weighted", "priority"):
+        fp = plan_serving_fleet(wls, budget_hosts=16, objective=objective)
+        assert set(fp.entries) == {"chat", "code"}
+        assert fp.total_estimated_slots <= 16
+        for e in fp.entries.values():
+            assert (e.schedule is not None) == (e.omega > 0)
+    # the higher tier is served first when hosts are scarce
+    fp = plan_serving_fleet(wls, budget_hosts=16, objective="priority")
+    assert fp.entries["chat"].omega > 0
+    with pytest.raises(ValueError):
+        plan_serving_fleet([wls[0], wls[0]], budget_hosts=16)
+
+
+def test_fleet_resource_surfaces(lib):
+    dags = {n: mk() for n, mk in MICRO_DAGS.items()}
+    fp = plan_fleet(dags, lib, budget_slots=24, objective="max_min",
+                    step=STEP, max_rate=MAX_RATE)
+    surfaces = fleet_resource_surfaces(fp, lib)
+    for name, sweep in surfaces.items():
+        e = fp.entries[name]
+        assert sweep.omegas[-1] == e.omega
+        # the surface's final column is the entry's attached prediction
+        for vm, cpu in e.prediction.vm_cpu.items():
+            row = sweep.vm_ids.index(vm)
+            assert sweep.vm_cpu[row, -1] == pytest.approx(cpu)

@@ -98,3 +98,82 @@ def test_serialization_roundtrip():
 def test_static_models():
     assert PAPER_MODELS["source"].static
     assert PAPER_MODELS["sink"].static
+
+
+# -- §8.4.2 CPU-oversubscription penalty: rate-scaled, not full-C ------------
+
+def _shared_slot_setup(cpu_per_thread: float, tail_cap: float = None):
+    """Two single-thread 100 t/s tasks of a synthetic kind co-located on ONE
+    slot — the §8.4.2 oversubscription setup.  ``tail_cap`` appends a
+    downstream task of that peak rate alone on a second slot, so the DAG's
+    binding constraint can sit below the shared slot's saturation point."""
+    from repro.core import Mapping, ModelLibrary, Thread, VM
+    from repro.core.allocation import Allocation, TaskAllocation
+    from repro.core.dag import Dataflow
+
+    models = ModelLibrary({"heavy": PerfModel.from_points(
+        "heavy", {1: (100.0, cpu_per_thread, 0.1)})})
+    df = Dataflow("shared")
+    df.add_task("a", "heavy", is_source=True)
+    df.add_task("b", "heavy", is_sink=tail_cap is None)
+    df.add_edge("a", "b")
+    tasks = {
+        "a": TaskAllocation("a", "heavy", 1, cpu_per_thread, 0.1, 100.0),
+        "b": TaskAllocation("b", "heavy", 1, cpu_per_thread, 0.1, 100.0),
+    }
+    vms = [VM(0, 1)]
+    if tail_cap is not None:
+        models.add(PerfModel.from_points("slow", {1: (tail_cap, 0.1, 0.1)}))
+        df.add_task("c", "slow", is_sink=True)
+        df.add_edge("b", "c")
+        tasks["c"] = TaskAllocation("c", "slow", 1, 0.1, 0.1, 100.0)
+        vms.append(VM(1, 1))
+    alloc = Allocation("shared", 100.0, "manual", tasks)
+    mapping = Mapping(vms)
+    slot = mapping.slots()[0]
+    mapping.assign(Thread("a", 0), slot)
+    mapping.assign(Thread("b", 0), slot)
+    if tail_cap is not None:
+        mapping.assign(Thread("c", 0), mapping.slots()[1])
+    return df, alloc, mapping, models
+
+
+def test_penalty_uses_rate_scaled_draw_not_full_c():
+    """Two 90%-CPU tasks sharing a slot: charging full C(q) caps each group
+    at 100/1.8 = 55.6 t/s, but the §8.4.2 draw scales with the served rate,
+    so the self-consistent throttle point is sqrt(100^2 / 1.8) = 74.5 t/s."""
+    from repro.core import predict_max_rate
+    df, alloc, mapping, models = _shared_slot_setup(0.9)
+    free = predict_max_rate(df, alloc, mapping, models, cpu_penalty=False)
+    assert free == pytest.approx(100.0)
+    throttled = predict_max_rate(df, alloc, mapping, models, cpu_penalty=True)
+    assert throttled == pytest.approx((100.0 ** 2 / 1.8) ** 0.5, rel=0.02)
+    assert 100.0 / 1.8 + 5 < throttled < free    # neither full-C nor free
+
+
+def test_penalty_binding_elsewhere_not_overthrottled():
+    """A 70 t/s downstream task binds the DAG; at 70 t/s the shared slot
+    draws 1.8 * 0.7 = 1.26 cores, throttling its groups to 79.4 t/s — still
+    above the binding rate, so the prediction stays 70.  Charging full C(q)
+    (the old bug) would have throttled them to 55.6 and capped the DAG
+    there."""
+    from repro.core import predict_max_rate
+    df, alloc, mapping, models = _shared_slot_setup(0.9, tail_cap=70.0)
+    free = predict_max_rate(df, alloc, mapping, models, cpu_penalty=False)
+    assert free == pytest.approx(70.0)
+    throttled = predict_max_rate(df, alloc, mapping, models, cpu_penalty=True)
+    assert throttled == pytest.approx(70.0, rel=0.01)
+    assert throttled > 100.0 / 1.8          # the full-C answer
+
+
+def test_effective_capacities_rate_scaled_with_omega():
+    """The scalar fixed point: full-C charging throttles to ~55.6 t/s, but at
+    a 30 t/s operating rate the draw is 0.54 cores and capacity stays I(q)."""
+    from repro.core.predictor import effective_capacities
+    df, alloc, mapping, models = _shared_slot_setup(0.9)
+    slot = mapping.slots()[0]
+    full = effective_capacities(df, alloc, mapping, models, cpu_penalty=True)
+    assert full["a"][slot] == pytest.approx(100.0 / 1.8, rel=1e-9)
+    scaled = effective_capacities(df, alloc, mapping, models,
+                                  cpu_penalty=True, omega=30.0)
+    assert scaled["a"][slot] == pytest.approx(100.0, rel=1e-6)

@@ -90,6 +90,26 @@ def test_simulator_latency_ordering(lib):
     assert lat["diamond"] < lat["linear"]
 
 
+def test_hop_latency_weighted_by_routing_fractions(lib):
+    """Expected hop latency weights (src group, dst group) pairs by the flow
+    they carry, so shuffle (threads-proportional) and slot-aware
+    (capacity-proportional) routing see different expected hops for the SAME
+    mapping — the old uniform pair average could not tell them apart."""
+    from repro.core.simulator import HOP_CROSS_VM, HOP_SAME_SLOT
+
+    dag = linear_dag()
+    s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+    hops = {}
+    for policy in (RoutingPolicy.SHUFFLE, RoutingPolicy.SLOT_AWARE):
+        sim = DataflowSimulator(dag, s.allocation, s.mapping, lib,
+                                policy=policy)
+        hops[policy] = sim._hops
+        for row_hops in sim._hops:
+            for h in row_hops:
+                assert HOP_SAME_SLOT <= h <= HOP_CROSS_VM
+    assert hops[RoutingPolicy.SHUFFLE] != hops[RoutingPolicy.SLOT_AWARE]
+
+
 def test_max_planned_rate_fixed_cluster(lib):
     """§8.5 protocol: highest rate fitting a fixed 20-slot cluster."""
     rate = max_planned_rate(linear_dag(), lib, allocator="mba", mapper="sam",
