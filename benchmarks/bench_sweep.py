@@ -1,6 +1,6 @@
 """Rate-sweep engine — vectorized planning + simulation vs scalar baselines.
 
-Two comparisons on the seed DAGs:
+Four comparisons on the seed DAGs:
 
 * ``simulate_sweep(omegas)``: one flat-array pass over a 50-point rate grid
   vs 50 per-rate ``DataflowSimulator.run`` calls (same engine, K=1), checking
@@ -8,6 +8,13 @@ Two comparisons on the seed DAGs:
 * ``max_planned_rate``: vectorized-slots + bisection vs the literal §8.5
   +10 t/s scan, checking the planned rates agree on every (DAG, scheduler
   pair) and counting scalar allocator/mapper invocations saved.
+* the jitted ``lax.scan`` engine vs the numpy tick loop on a 50-rate x 60 s
+  grid (the fleet-study workload): post-compile speedup target >= 10x at
+  <= 1e-10 equivalence on every raw surface.
+* the §11 shuffle-vs-slot-aware routing study end-to-end on the scan
+  engine: per DAG and policy, the planner's rate vs the §8.5 predicted max
+  vs the simulated actual max, plus predicted/actual stability agreement
+  across the rate grid.
 """
 
 from __future__ import annotations
@@ -17,7 +24,8 @@ import time
 import numpy as np
 
 from repro.core import (ALL_DAGS, MICRO_DAGS, DataflowSimulator,
-                        paper_library, plan)
+                        RoutingPolicy, paper_library, plan,
+                        predict_max_rate)
 from repro.core.scheduler import max_planned_rate
 
 from .common import Table
@@ -25,9 +33,19 @@ from .common import Table
 PAIRS = (("lsa", "dsm"), ("lsa", "rsm"),
          ("mba", "dsm"), ("mba", "rsm"), ("mba", "sam"))
 BUDGET = 20
+RAW_FIELDS = ("queues", "busy", "served", "realized", "latency")
 
 
-def run(*, n_rates: int = 50, sim_duration: float = 12.0) -> dict:
+def _max_rel_err(a, b) -> float:
+    return max(float(np.max(np.abs(getattr(a, f) - getattr(b, f))
+                            / (1.0 + np.abs(getattr(a, f)))))
+               if getattr(a, f).size else 0.0
+               for f in RAW_FIELDS)
+
+
+def run(*, n_rates: int = 50, sim_duration: float = 12.0,
+        jit_rates: int = 50, jit_duration: float = 60.0,
+        jit_dt: float = 0.05, study_grid: int = 21) -> dict:
     lib = paper_library()
 
     # -- sweep simulation vs per-rate runs -----------------------------------
@@ -79,17 +97,122 @@ def run(*, n_rates: int = 50, sim_duration: float = 12.0) -> dict:
                      s1["allocator_calls"], s2["allocator_calls"])
     tbl2.show("max_planned_rate: scan vs vectorized bisection")
 
+    # -- jitted lax.scan engine vs numpy tick loop ---------------------------
+    tbl3 = Table(["dag", "rates", "numpy_s", "compile_s", "scan_s",
+                  "speedup", "max_rel_err"])
+    jit_speedups = []
+    jit_err = 0.0
+    for name, mk in MICRO_DAGS.items():
+        dag = mk()
+        s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+        sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+        omegas = np.linspace(10, 150, jit_rates)
+        kw = dict(duration=jit_duration, dt=jit_dt)
+        # best-of-N on both engines so a loaded machine doesn't skew the
+        # ratio either way
+        t_np = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            raw_np = sim.sweep_raw(omegas, engine="numpy", **kw)
+            t_np = min(t_np, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        sim.sweep_raw(omegas, engine="scan", **kw)     # compile + run
+        t_compile = time.perf_counter() - t0
+        t_sc = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            raw_sc = sim.sweep_raw(omegas, engine="scan", **kw)
+            t_sc = min(t_sc, time.perf_counter() - t0)
+        err = _max_rel_err(raw_np, raw_sc)
+        jit_err = max(jit_err, err)
+        jit_speedups.append(t_np / t_sc)
+        tbl3.add(name, jit_rates, round(t_np, 3), round(t_compile, 2),
+                 round(t_sc, 4), round(t_np / t_sc, 1), f"{err:.1e}")
+    tbl3.show(f"lax.scan engine vs numpy ({jit_rates} rates x "
+              f"{jit_duration:g} s @ dt={jit_dt:g})")
+
+    # -- §11 routing study: planned / predicted / actual on the scan engine --
+    tbl4 = Table(["dag", "policy", "planned", "predicted", "actual",
+                  "grid_agree"])
+    study = {}
+    for name, mk in MICRO_DAGS.items():
+        dag = mk()
+        planned = max_planned_rate(dag, lib, allocator="mba", mapper="sam",
+                                   budget_slots=BUDGET, method="bisect")
+        s = plan(dag, planned, lib, allocator="mba", mapper="sam")
+        for policy in RoutingPolicy:
+            predicted = predict_max_rate(dag, s.allocation, s.mapping, lib,
+                                         policy)
+            sim = DataflowSimulator(dag, s.allocation, s.mapping, lib,
+                                    policy=policy, engine="scan")
+            actual = sim.max_stable_rate(duration=10.0, dt=0.1)
+            grid = np.linspace(0.5 * planned, 1.5 * planned, study_grid)
+            actual_stable = np.array(
+                [r.stable for r in sim.simulate_sweep(grid, duration=10.0,
+                                                      dt=0.1)])
+            predicted_stable = grid <= predicted
+            agree = float(np.mean(actual_stable == predicted_stable))
+            study[f"{name}/{policy.value}"] = {
+                "planned": round(planned, 1),
+                "predicted": round(predicted, 1),
+                "actual": round(actual, 1), "grid_agree": round(agree, 2)}
+            tbl4.add(name, policy.value, round(planned, 0),
+                     round(predicted, 1), round(actual, 1),
+                     f"{agree:.0%}")
+    tbl4.show("§11 routing study: planned vs predicted vs actual "
+              f"({study_grid}-point grid, scan engine)")
+
     mean_speedup = sum(speedups) / len(speedups)
     call_ratio = scan_calls / max(1, bisect_calls)
+    jit_min = min(jit_speedups)
     print(f"\nsweep speedup: mean {mean_speedup:.1f}x over "
           f"{len(speedups)} DAGs (target >= 3x)")
     print(f"planned rates identical: {all_match}")
     print(f"allocator calls: scan {scan_calls} vs bisect {bisect_calls} "
           f"({call_ratio:.1f}x fewer; target >= 5x); "
           f"wall {t_scan:.2f}s vs {t_bisect:.2f}s")
+    print(f"jitted engine: min {jit_min:.1f}x / mean "
+          f"{sum(jit_speedups) / len(jit_speedups):.1f}x post-compile "
+          f"(target >= 10x), max rel err {jit_err:.1e} (target <= 1e-10)")
     return {"sweep_speedup": round(mean_speedup, 1),
             "rates_match": all_match,
-            "allocator_call_ratio": round(call_ratio, 1)}
+            "allocator_call_ratio": round(call_ratio, 1),
+            "jit_speedup_min": round(jit_min, 1),
+            "jit_max_rel_err": jit_err,
+            "routing_study": study}
+
+
+def smoke() -> dict:
+    """Tier-1-safe smoke of the jitted engine: a tiny grid through both
+    engines (single DAG + 2-DAG fleet co-sim), asserting <= 1e-10
+    equivalence.  Fails fast on compile or kernel regressions."""
+    from repro.core import (diamond_dag, linear_dag, plan_fleet,
+                            simulate_fleet)
+    lib = paper_library()
+    dag = diamond_dag()
+    s = plan(dag, 100, lib, allocator="mba", mapper="sam")
+    sim = DataflowSimulator(dag, s.allocation, s.mapping, lib)
+    omegas = np.linspace(20, 160, 5)
+    kw = dict(duration=3.0, dt=0.1)
+    t0 = time.perf_counter()
+    raw_np = sim.sweep_raw(omegas, engine="numpy", **kw)
+    raw_sc = sim.sweep_raw(omegas, engine="scan", **kw)
+    err = _max_rel_err(raw_np, raw_sc)
+    assert err <= 1e-10, f"scan/numpy diverged: {err:.2e}"
+    fp = plan_fleet({"linear": linear_dag(), "diamond": diamond_dag()}, lib,
+                    budget_slots=10)
+    rep_s = simulate_fleet(fp, lib, fractions=[0.5, 1.0], duration=3.0,
+                           dt=0.1, engine="scan")
+    rep_n = simulate_fleet(fp, lib, fractions=[0.5, 1.0], duration=3.0,
+                           dt=0.1, engine="numpy")
+    for name in rep_s.entries:
+        got = [r.stable for r in rep_s.entries[name].results]
+        want = [r.stable for r in rep_n.entries[name].results]
+        assert got == want, f"fleet verdicts diverged for {name}"
+    wall = time.perf_counter() - t0
+    print(f"smoke OK: scan==numpy to {err:.1e} on {len(omegas)}-rate grid "
+          f"+ 2-DAG fleet co-sim ({wall:.1f}s)")
+    return {"smoke_ok": True, "max_rel_err": err}
 
 
 if __name__ == "__main__":

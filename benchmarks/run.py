@@ -1,7 +1,9 @@
 """Benchmark aggregator — one function per paper table/figure.
 
 Prints a ``name,us_per_call,derived`` CSV summary line per benchmark after
-each benchmark's own detailed table.
+each benchmark's own detailed table.  ``--smoke`` runs only the tier-1-safe
+jitted-engine smoke (tiny grid, asserts scan==numpy) so CI catches compile
+regressions fast.
 """
 
 from __future__ import annotations
@@ -29,6 +31,11 @@ BENCHES = [
 
 
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        derived, us = timed(bench_sweep.smoke)
+        print("\nname,us_per_call,derived")
+        print(f"sweep_smoke,{us:.0f},{json.dumps(derived, separators=(';', ':'))}")
+        return
     only = sys.argv[1] if len(sys.argv) > 1 else None
     rows = []
     for name, fn in BENCHES:

@@ -5,6 +5,10 @@ shared 32-slot cluster under each fleet objective, then shows the per-VM
 predicted resource report and what a budget cut preempts first.
 
 Run:  python examples/fleet_plan.py
+
+(For the empirical leg — co-simulating the planned fleet on the jitted
+sweep engine and comparing predicted vs actual — see
+``examples/fleet_simulate.py``.)
 """
 
 import os

@@ -31,8 +31,9 @@ from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
                         predict_max_rate, predict_max_rate_gi,
                         predict_resources, predict_resources_sweep)
 from .scheduler import Schedule, max_planned_rate, plan, replan_on_failure
-from .fleet import (FleetEntry, FleetPlan, fleet_resource_surfaces,
-                    plan_fleet)
-from .simulator import DataflowSimulator, SimResult, measured_resources
+from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
+                    fleet_resource_surfaces, plan_fleet, simulate_fleet)
+from .simulator import (DataflowSimulator, SimResult, SweepBatch, SweepRaw,
+                        measured_resources)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -17,7 +17,13 @@ tenants sharing one slot budget.  This module answers the joint question
    ``grow_fixed_vms`` (the §8.4 +1-slot retry rule on mapper
    fragmentation) — yielding an ordinary per-DAG
    :class:`~repro.core.scheduler.Schedule`, and the §8.5.2 sweep
-   predictor reports CPU/mem per DAG and per VM.
+   predictor reports CPU/mem per DAG and per VM;
+4. :func:`simulate_fleet` closes the loop empirically: every planned
+   DAG's rate sweep is co-simulated in ONE batched time loop on the
+   shared VM pool (the simulator's jitted ``lax.scan`` engine by
+   default, ``engine="numpy"`` for the reference path), reporting fleet
+   predicted-vs-actual per-VM CPU/mem and each DAG's actual max stable
+   rate.
 
 Objectives
 ----------
@@ -57,12 +63,14 @@ import numpy as np
 
 from .batch import batch_slots, bisect_largest_true, prefix_feasible_count
 from .dag import Dataflow
-from .mapping import DEFAULT_VM_SIZES, VM, acquire_vms
+from .mapping import DEFAULT_VM_SIZES, VM, SlotId, acquire_vms
 from .perfmodel import ModelLibrary
 from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
-                        build_group_index, predict_resources_sweep)
+                        build_group_index, predict_max_rate_gi,
+                        predict_resources_sweep)
 from .routing import RoutingPolicy
 from .scheduler import Schedule, plan
+from .simulator import DataflowSimulator, SimResult, SweepBatch
 
 ModelsArg = Union[ModelLibrary, Mapping[str, ModelLibrary]]
 
@@ -407,3 +415,160 @@ def fleet_resource_surfaces(fleet: FleetPlan, models: ModelsArg,
         out[name] = predict_resources_sweep(gi, sweep,
                                             mapping=e.schedule.mapping)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level simulation: predicted vs ACTUAL on the shared VM pool.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetSimEntry:
+    """One DAG's empirical leg of the fleet study."""
+
+    name: str
+    omega_planned: float          # the fleet plan's rate for this DAG
+    omegas: np.ndarray            # (K,) swept rates (fractions x planned)
+    results: List[SimResult]      # one per swept rate
+    predicted_max_rate: float     # §8.5 model prediction (no §8.4.2 penalty)
+    actual_max_stable: float      # largest swept rate the simulation sustains
+
+    @property
+    def planned_is_stable(self) -> bool:
+        """Did the simulation sustain the rate the planner promised?"""
+        return self.actual_max_stable >= self.omega_planned
+
+
+@dataclasses.dataclass
+class FleetSimReport:
+    """Fleet predicted-vs-actual study (the paper's Figs. 10-12 protocol,
+    run jointly for every planned DAG on the shared VM pool).
+
+    ``vm_cpu_predicted``/``vm_mem_predicted`` are the §8.5.2 model surfaces
+    and the ``_actual`` counterparts the co-simulation's served-rate draw
+    (proportional C/M scale-down on what each group *actually* served, the
+    noise-free analogue of :func:`repro.core.simulator.measured_resources`)
+    — both evaluated at ``at_fraction`` of the planned rates (the fraction
+    closest to 1.0), so the comparison never mixes operating points.
+    ``slot_busy`` sums each union-pool slot's per-group thread utilizations
+    at the same column (a slot hosting several saturated groups reads above
+    1.0).
+    """
+
+    fractions: np.ndarray
+    at_fraction: float
+    entries: Dict[str, FleetSimEntry]
+    skipped: List[str]                  # DAGs with no mapping / zero rate
+    vm_cpu_predicted: Dict[int, float]
+    vm_mem_predicted: Dict[int, float]
+    vm_cpu_actual: Dict[int, float]
+    vm_mem_actual: Dict[int, float]
+    slot_busy: Dict[SlotId, float]
+    policy: RoutingPolicy
+    engine: str
+
+    def describe(self) -> str:
+        lines = [f"FleetSimReport[{self.policy.value}, engine={self.engine}] "
+                 f"{len(self.entries)} DAGs simulated"
+                 + (f", skipped {self.skipped}" if self.skipped else "")]
+        for e in self.entries.values():
+            lines.append(
+                f"  {e.name}: planned {e.omega_planned:g} t/s, predicted max "
+                f"{e.predicted_max_rate:.1f}, actual max stable "
+                f"{e.actual_max_stable:g}"
+                f" ({'OK' if e.planned_is_stable else 'MISSES PLAN'})")
+        for vm in sorted(self.vm_cpu_predicted):
+            lines.append(
+                f"  vm{vm}: cpu predicted {self.vm_cpu_predicted[vm]:.2f} / "
+                f"actual {self.vm_cpu_actual.get(vm, 0.0):.2f}, "
+                f"mem predicted {self.vm_mem_predicted[vm]:.2f} / "
+                f"actual {self.vm_mem_actual.get(vm, 0.0):.2f}")
+        return "\n".join(lines)
+
+
+def simulate_fleet(fleet: FleetPlan, models: ModelsArg, *,
+                   fractions: Optional[Sequence[float]] = None,
+                   duration: float = 20.0, dt: float = 0.05,
+                   warmup: float = 5.0, latency_sample_every: float = 0.25,
+                   engine: str = "scan",
+                   policy: Optional[RoutingPolicy] = None,
+                   cpu_penalty: bool = True) -> FleetSimReport:
+    """Co-simulate every planned DAG's rate sweep in ONE batched time loop.
+
+    Each mapped DAG is swept over ``fractions`` of its planned rate (the
+    shared sweep axis; defaults to 0.25..1.25 including 1.0), all DAGs
+    advancing together through a single :class:`SweepBatch` pass over the
+    fleet's union VM pool — under ``engine="scan"`` that is one jitted
+    ``lax.scan`` for the entire fleet.  Reports per-DAG
+    planned/predicted/actual max rates and fleet per-VM predicted-vs-actual
+    CPU/mem at the planned operating point.
+    """
+    fracs = (np.asarray(fractions, dtype=float) if fractions is not None
+             else np.linspace(0.25, 1.25, 9))
+    if len(fracs) == 0:
+        raise ValueError("fractions must be non-empty")
+    k1 = int(np.argmin(np.abs(fracs - 1.0)))
+    policy = policy or fleet.policy
+    runnable: List[FleetEntry] = []
+    skipped: List[str] = []
+    for e in fleet.entries.values():
+        if e.schedule is not None and e.omega > 0:
+            runnable.append(e)
+        else:
+            skipped.append(e.name)
+    if not runnable:
+        raise ValueError("fleet plan has no mapped DAGs to simulate "
+                         "(was it planned with mapper=None?)")
+    sims = [DataflowSimulator(e.dag, e.schedule.allocation,
+                              e.schedule.mapping, _models_for(models, e.name),
+                              policy=policy, cpu_penalty=cpu_penalty)
+            for e in runnable]
+    batch = SweepBatch(sims)
+    omegas_list = [fracs * e.omega for e in runnable]
+    raw = batch.sweep_raw(omegas_list, duration=duration, dt=dt,
+                          warmup=warmup,
+                          latency_sample_every=latency_sample_every,
+                          engine=engine)
+    results = batch.results_from_raw(omegas_list, raw)
+
+    entries: Dict[str, FleetSimEntry] = {}
+    vm_cpu_p: Dict[int, float] = {}
+    vm_mem_p: Dict[int, float] = {}
+    vm_cpu_a: Dict[int, float] = {}
+    vm_mem_a: Dict[int, float] = {}
+    for i, (e, sim) in enumerate(zip(runnable, sims)):
+        gi = sim.gi
+        stable = [r.omega for r in results[i] if r.stable]
+        entries[e.name] = FleetSimEntry(
+            name=e.name, omega_planned=e.omega,
+            omegas=np.asarray(omegas_list[i]), results=results[i],
+            predicted_max_rate=predict_max_rate_gi(gi),
+            actual_max_stable=max(stable) if stable else 0.0)
+        # §8.5.2 prediction at the SAME operating point the actuals are
+        # measured at (fracs[k1] of the planned rate), under the study's
+        # policy — so predicted-vs-actual never mixes operating points even
+        # when ``fractions`` excludes 1.0
+        pred = predict_resources_sweep(gi, [float(fracs[k1]) * e.omega],
+                                       mapping=e.schedule.mapping).at(0)
+        for vm, c in pred.vm_cpu.items():
+            vm_cpu_p[vm] = vm_cpu_p.get(vm, 0.0) + c
+        for vm, m in pred.vm_mem.items():
+            vm_mem_p[vm] = vm_mem_p.get(vm, 0.0) + m
+        # actual draw from the co-simulated served rates at fraction k1:
+        # proportional C/M scale-down on each group's mean served rate
+        g_lo, g_hi = batch.group_spans[i]
+        served_rate = raw.served[g_lo:g_hi, k1] / raw.window
+        frac_used = np.where(gi.g_cap > 0,
+                             np.minimum(1.0, served_rate /
+                                        np.where(gi.g_cap > 0, gi.g_cap, 1.0)),
+                             1.0)
+        for g in range(gi.n_groups):
+            vm = gi.slots[int(gi.g_slot[g])].vm
+            vm_cpu_a[vm] = vm_cpu_a.get(vm, 0.0) + gi.g_cpu[g] * frac_used[g]
+            vm_mem_a[vm] = vm_mem_a.get(vm, 0.0) + gi.g_mem[g] * frac_used[g]
+    slot_busy = {s: float(raw.busy[j, k1] / raw.window)
+                 for j, s in enumerate(batch.spec.slots)}
+    return FleetSimReport(
+        fractions=fracs, at_fraction=float(fracs[k1]), entries=entries,
+        skipped=skipped, vm_cpu_predicted=vm_cpu_p, vm_mem_predicted=vm_mem_p,
+        vm_cpu_actual=vm_cpu_a, vm_mem_actual=vm_mem_a, slot_busy=slot_busy,
+        policy=policy, engine=engine)

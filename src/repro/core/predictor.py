@@ -88,6 +88,12 @@ class GroupIndex:
     def task_slice(self, row: int) -> slice:
         return slice(self.task_start[row], self.task_start[row + 1])
 
+    def row_slices(self) -> List[Tuple[int, int]]:
+        """Per task row, the contiguous ``(start, stop)`` group span — the
+        gather layout the sweep engines' tick kernels are built from."""
+        return [(int(self.task_start[r]), int(self.task_start[r + 1]))
+                for r in range(len(self.tasks))]
+
 
 def build_group_index(dag: Dataflow, alloc: Allocation,
                       mapping: ThreadMapping, models: ModelLibrary,

@@ -251,3 +251,41 @@ def test_fleet_resource_surfaces(lib):
         for vm, cpu in e.prediction.vm_cpu.items():
             row = sweep.vm_ids.index(vm)
             assert sweep.vm_cpu[row, -1] == pytest.approx(cpu)
+
+
+def test_simulate_fleet_report(lib):
+    """The fleet study's invariants: every mapped DAG gets a sweep anchored
+    at its planned rate, max-stable is one of the swept rates, and actual
+    per-VM draw stays at or below the §8.5.2 prediction (proportional
+    scale-down of the same C/M on served <= routed rates)."""
+    from repro.core import simulate_fleet
+    dags = {"linear": linear_dag(), "diamond": diamond_dag()}
+    fp = plan_fleet(dags, lib, budget_slots=12)
+    rep = simulate_fleet(fp, lib, duration=8.0, dt=0.1, engine="numpy")
+    assert rep.at_fraction == 1.0
+    assert set(rep.entries) == set(dags)
+    assert not rep.skipped
+    for name, e in rep.entries.items():
+        assert e.omega_planned == fp.entries[name].omega
+        assert len(e.results) == len(rep.fractions)
+        np.testing.assert_allclose(e.omegas,
+                                   rep.fractions * e.omega_planned)
+        assert e.actual_max_stable in set(e.omegas) | {0.0}
+        assert e.predicted_max_rate > 0
+        # low fractions of a budget-feasible plan must simulate stable
+        assert e.results[0].stable
+    vms = {vm.id for vm in fp.pool}
+    assert set(rep.vm_cpu_predicted) == vms
+    for vm in vms:
+        assert rep.vm_cpu_actual[vm] <= rep.vm_cpu_predicted[vm] + 1e-9
+        assert rep.vm_mem_actual[vm] <= rep.vm_mem_predicted[vm] + 1e-9
+    assert rep.slot_busy
+    assert rep.describe()
+
+
+def test_simulate_fleet_rejects_unmapped_plan(lib):
+    fp = plan_fleet({"linear": linear_dag()}, lib, budget_slots=12,
+                    mapper=None)
+    from repro.core import simulate_fleet
+    with pytest.raises(ValueError):
+        simulate_fleet(fp, lib)
