@@ -1,0 +1,172 @@
+"""Simulation-guided mapper search — vmapped candidate evaluation vs loops.
+
+Three measurements on the micro DAGs:
+
+* **candidates/sec**: the shape-bucketed ``jax.vmap`` evaluation of a whole
+  candidate pool (one compiled kernel per shape bucket) vs a per-candidate
+  ``simulate_sweep`` loop on the reference numpy engine — the acceptance
+  target is >= 5x at >= 8 candidates, with both engines agreeing to 1e-10.
+* **kernel-cache warmth**: a second same-shape search run must pay ZERO
+  recompilation — no new kernel builds and no new jit executables
+  (``scan_kernel_cache_stats`` deltas) — and its wall time shows it.
+* **search gain**: the best candidate's simulated max stable rate vs each
+  single §7 mapper on the same pool (what model-guided planning leaves on
+  the table).
+
+Emits ``BENCH_mapper_search.json`` next to the cwd for the nightly bench
+artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import MICRO_DAGS, paper_library
+from repro.core.allocation import ALLOCATORS
+from repro.core.search import evaluate_candidates, search_mapping
+from repro.core.simulator import scan_kernel_cache_stats
+
+from .common import Table
+
+RAW_FIELDS = ("queues", "busy", "served", "realized", "latency")
+JSON_PATH = "BENCH_mapper_search.json"
+
+
+def _max_err(a, b) -> float:
+    return max(float(np.max(np.abs(getattr(a, f) - getattr(b, f))))
+               if getattr(a, f).size else 0.0 for f in RAW_FIELDS)
+
+
+def run(*, n_moves: int = 12, n_fracs: int = 11, duration: float = 8.0,
+        dt: float = 0.1) -> dict:
+    lib = paper_library()
+    fracs = np.linspace(0.5, 1.5, n_fracs)
+    kw = dict(n_moves=n_moves, rate_fractions=fracs, duration=duration, dt=dt)
+
+    tbl = Table(["dag", "cands", "buckets", "loop_s", "vmap_s", "cand/s",
+                 "speedup", "max_err"])
+    tbl2 = Table(["dag", "best", "max_stable", "vs_dsm", "vs_rsm", "vs_sam",
+                  "first_s", "rerun_s", "recompiles"])
+    speedups, out = [], {}
+    agree_err = 0.0
+    for name, mk in MICRO_DAGS.items():
+        dag = mk()
+        t0 = time.perf_counter()
+        ranked = search_mapping(dag, 100, lib, **kw)
+        t_first = time.perf_counter() - t0
+        # second same-shape search: every kernel comes out of the module
+        # cache, every jit executable is already compiled
+        before = scan_kernel_cache_stats()
+        t0 = time.perf_counter()
+        ranked = search_mapping(dag, 100, lib, **kw)
+        t_second = time.perf_counter() - t0
+        after = scan_kernel_cache_stats()
+        recompiles = (after["misses"] - before["misses"]) \
+            + (after["compiled"] - before["compiled"])
+
+        alloc = ALLOCATORS["mba"](dag, 100, lib)
+        maps = [c.mapping for c in ranked.candidates]
+        omegas = 100 * fracs
+        ekw = dict(duration=duration, dt=dt)
+        # vmapped evaluation (warm) vs the per-candidate numpy loop
+        t_vmap = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            raw_v = evaluate_candidates(dag, alloc, maps, lib, omegas,
+                                        engine="vmap", **ekw)
+            t_vmap = min(t_vmap, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        raw_n = evaluate_candidates(dag, alloc, maps, lib, omegas,
+                                    engine="numpy", **ekw)
+        t_loop = time.perf_counter() - t0
+        err = max(_max_err(a, b) for a, b in zip(raw_v, raw_n))
+        agree_err = max(agree_err, err)
+        speedup = t_loop / t_vmap
+        speedups.append(speedup)
+        tbl.add(name, len(maps), len(ranked.bucket_sizes), round(t_loop, 3),
+                round(t_vmap, 4), round(len(maps) / t_vmap, 1),
+                round(speedup, 1), f"{err:.1e}")
+
+        gains = {m: ranked.gain_over(m) for m in ("dsm", "rsm", "sam")}
+        best = ranked.best
+        tbl2.add(name, best.name, round(best.max_stable_rate, 1),
+                 *[("n/a" if g is None else round(g, 1))
+                   for g in gains.values()],
+                 round(t_first, 2), round(t_second, 2), recompiles)
+        out[name] = {
+            "candidates": len(maps),
+            "buckets": ranked.bucket_sizes,
+            "cand_per_sec_vmap": round(len(maps) / t_vmap, 1),
+            "cand_per_sec_loop": round(len(maps) / t_loop, 1),
+            "vmap_speedup": round(speedup, 1),
+            "max_err": err,
+            "best": best.name,
+            "best_max_stable": best.max_stable_rate,
+            "gain_over": {m: g for m, g in gains.items()},
+            "search_s_first": round(t_first, 2),
+            "search_s_rerun": round(t_second, 2),
+            "rerun_recompiles": recompiles,
+        }
+    tbl.show(f"vmapped candidate sweep vs per-candidate loop "
+             f"({n_fracs} rates x {duration:g} s @ dt={dt:g})")
+    tbl2.show("search gain over single mappers + kernel-cache warmth")
+
+    min_speedup = min(speedups)
+    total_recompiles = sum(d["rerun_recompiles"] for d in out.values())
+    print(f"\nvmap speedup: min {min_speedup:.1f}x / mean "
+          f"{sum(speedups) / len(speedups):.1f}x over "
+          f"{min(d['candidates'] for d in out.values())}+ candidates "
+          f"(target >= 5x at >= 8), max |err| {agree_err:.1e}")
+    print(f"second-run recompilations: {total_recompiles} (target 0)")
+    derived = {"vmap_speedup_min": round(min_speedup, 1),
+               "max_err": agree_err,
+               "rerun_recompiles": total_recompiles,
+               "dags": out}
+    with open(JSON_PATH, "w") as f:
+        json.dump(derived, f, indent=2, sort_keys=True)
+    print(f"wrote {JSON_PATH}")
+    return derived
+
+
+def smoke() -> dict:
+    """Tier-1-safe mapper-search smoke: a 2-candidate pool on a tiny grid
+    through both evaluation engines, asserting <= 1e-10 equivalence and a
+    best-candidate rate no worse than the bases'."""
+    from repro.core import diamond_dag
+    lib = paper_library()
+    dag = diamond_dag()
+    t0 = time.perf_counter()
+    ranked = search_mapping(dag, 100, lib, include=("dsm", "sam"),
+                            rsm_weights=(), n_moves=0,
+                            rate_fractions=[0.8, 1.2], duration=2.0, dt=0.1)
+    assert len(ranked.candidates) == 2
+    alloc = ALLOCATORS["mba"](dag, 100, lib)
+    maps = [c.mapping for c in ranked.candidates]
+    omegas = np.array([80.0, 120.0])
+    kw = dict(duration=2.0, dt=0.1)
+    raw_v = evaluate_candidates(dag, alloc, maps, lib, omegas,
+                                engine="vmap", **kw)
+    raw_n = evaluate_candidates(dag, alloc, maps, lib, omegas,
+                                engine="numpy", **kw)
+    err = max(_max_err(a, b) for a, b in zip(raw_v, raw_n))
+    assert err <= 1e-10, f"vmap/numpy diverged: {err:.2e}"
+    # cross-check the ranking against the reference engine: the winner's
+    # rate must be >= every candidate's max stable rate as judged from the
+    # independent numpy runs (an engine or judging regression fails this)
+    from repro.core.search import _judge_raw
+    for raw in raw_n:
+        stable, _ = _judge_raw(raw)
+        ok = omegas[stable]
+        numpy_rate = float(ok.max()) if ok.size else 0.0
+        assert ranked.best.max_stable_rate >= numpy_rate - 1e-9
+    wall = time.perf_counter() - t0
+    print(f"mapper-search smoke OK: vmap==numpy to {err:.1e} on "
+          f"{len(maps)} candidates ({wall:.1f}s)")
+    return {"smoke_ok": True, "max_err": err}
+
+
+if __name__ == "__main__":
+    run()

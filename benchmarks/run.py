@@ -11,9 +11,10 @@ from __future__ import annotations
 import json
 import sys
 
-from . import (bench_app_dags, bench_fleet, bench_latency, bench_micro_dags,
-               bench_optimized, bench_perfmodels, bench_predictability,
-               bench_roofline, bench_serving, bench_sweep)
+from . import (bench_app_dags, bench_fleet, bench_latency,
+               bench_mapper_search, bench_micro_dags, bench_optimized,
+               bench_perfmodels, bench_predictability, bench_roofline,
+               bench_serving, bench_sweep)
 from .common import timed
 
 BENCHES = [
@@ -23,6 +24,7 @@ BENCHES = [
     ("fig9_12_predictability", bench_predictability.run),
     ("fig13_latency", bench_latency.run),
     ("sweep_engine", bench_sweep.run),
+    ("mapper_search", bench_mapper_search.run),
     ("fleet_planner", bench_fleet.run),
     ("serving_planner", bench_serving.run),
     ("roofline_table", bench_roofline.run),
@@ -32,9 +34,15 @@ BENCHES = [
 
 def main() -> None:
     if "--smoke" in sys.argv[1:]:
-        derived, us = timed(bench_sweep.smoke)
+        rows = []
+        for name, fn in (("sweep_smoke", bench_sweep.smoke),
+                         ("mapper_search_smoke", bench_mapper_search.smoke)):
+            derived, us = timed(fn)
+            rows.append((name, us, derived))
         print("\nname,us_per_call,derived")
-        print(f"sweep_smoke,{us:.0f},{json.dumps(derived, separators=(';', ':'))}")
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},"
+                  f"{json.dumps(derived, separators=(';', ':'))}")
         return
     only = sys.argv[1] if len(sys.argv) > 1 else None
     rows = []

@@ -10,6 +10,8 @@ Public surface:
 * end-to-end planning (``scheduler``), model-based prediction
   (``predictor``) and the fluid simulator (``simulator``)
 * multi-DAG fleet planning over one shared slot budget (``fleet``)
+* simulation-guided mapper search — candidate pools scored on the vmapped
+  scan engine (``search``)
 """
 
 from .dag import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Edge, Routing,
@@ -23,8 +25,9 @@ from .allocation import (ALLOCATORS, Allocation, TaskAllocation,
 from .batch import (BatchAllocation, batch_allocate, batch_feasible,
                     batch_slots)
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
-                      Mapping, SlotId, Thread, VM, acquire_vms, map_dsm,
-                      map_rsm, map_sam)
+                      Mapping, SlotId, Thread, VM, acquire_vms, local_moves,
+                      map_dsm, map_rsm, map_sam, mapping_signature,
+                      remap_threads)
 from .routing import RoutingPolicy
 from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
                         build_group_index, effective_capacity_matrix,
@@ -34,6 +37,9 @@ from .scheduler import Schedule, max_planned_rate, plan, replan_on_failure
 from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
                     fleet_resource_surfaces, plan_fleet, simulate_fleet)
 from .simulator import (DataflowSimulator, SimResult, SweepBatch, SweepRaw,
-                        measured_resources)
+                        measured_resources, scan_kernel_cache_clear,
+                        scan_kernel_cache_stats)
+from .search import (CandidateResult, RankedCandidates, evaluate_candidates,
+                     generate_candidates, search_mapping)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -281,6 +281,8 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
                step: float = 10.0, max_rate: float = 1e4,
                vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
                policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
+               refine_search: bool = False,
+               search_opts: Optional[Dict] = None,
                stats: Optional[Dict[str, int]] = None) -> FleetPlan:
     """Share ``budget_slots`` across ``dags`` under ``objective``.
 
@@ -292,9 +294,23 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
     ``priority`` tiers.  ``mapper=None`` plans rates only (no VM pool, no
     thread mappings) — the pure array-pass path used for optimality tests.
 
+    ``refine_search`` runs the opt-in simulation-guided refinement pass
+    (:func:`repro.core.search.search_mapping`) over each planned DAG's
+    pinned VM subset: the base mapper's own mapping competes against the
+    whole candidate pool on the vmapped scan engine, and a strictly better
+    candidate replaces it (``Schedule.mapper`` becomes ``"search"`` with
+    the winner's name in ``search_winner``).  The pool is NOT grown — the
+    refinement never spends slots beyond the §8.4 retries the base mapper
+    already paid.  ``search_opts`` forwards keyword overrides (e.g. tiny
+    grids for CI); keys the refinement owns — pool, allocation, allocator,
+    routing policy — are reserved and raise ``ValueError``.
+
     ``stats`` (optional) is filled with ``batch_passes`` (vectorized grid
     passes, one per DAG), ``allocator_calls`` and ``mapper_calls`` (scalar
-    calls, one per mapping attempt) for comparison against per-DAG scans.
+    calls, one per mapping attempt) — plus, under ``refine_search``,
+    ``search_candidates`` (total pool size evaluated) and
+    ``search_improved`` (DAGs whose mapping the search beat) — for
+    comparison against per-DAG scans.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown fleet objective {objective!r}")
@@ -313,6 +329,9 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
     counters.setdefault("batch_passes", 0)
     counters.setdefault("allocator_calls", 0)
     counters.setdefault("mapper_calls", 0)
+    if refine_search:
+        counters.setdefault("search_candidates", 0)
+        counters.setdefault("search_improved", 0)
 
     # 1. the whole (dag x rate) slot surface, one array pass per DAG
     grid = step * np.arange(1, int(max_rate / step) + 1)
@@ -366,6 +385,9 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
                      mapper=mapper, fixed_vms=subset, grow_fixed_vms=True)
         # one mapper attempt per §8.4 retry (each retry adds one slot)
         counters["mapper_calls"] += 1 + len(sched.vms) - len(subset)
+        if refine_search:
+            sched = _refine_schedule(sched, lib, policy, search_opts,
+                                     counters)
         schedules[name] = sched
         next_id = max(vm.id for vm in sched.vms) + 1
         pool.extend(sched.vms)
@@ -390,6 +412,39 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
     return FleetPlan(objective=objective, budget_slots=budget_slots,
                      grid=grid, slots_matrix=slots, entries=entries,
                      pool=pool, overflow_slots=overflow, policy=policy)
+
+
+def _refine_schedule(sched: Schedule, models: ModelLibrary,
+                     policy: RoutingPolicy, search_opts: Optional[Dict],
+                     counters: Dict[str, int]) -> Schedule:
+    """One DAG's simulation-guided refinement on its pinned VM subset: the
+    base mapping is part of the candidate pool, so the winner is never
+    worse; replace the schedule only on a strict simulated-rate win."""
+    from .mapping import mapping_signature
+    from .search import RESERVED_SEARCH_OPTS, search_mapping
+    opts = dict(search_opts or {})
+    bad = (RESERVED_SEARCH_OPTS | {"policy"}) & set(opts)
+    if bad:
+        raise ValueError(f"search_opts may not override {sorted(bad)} "
+                         "(owned by the fleet refinement pass)")
+    ranked = search_mapping(
+        sched.dag, sched.omega, models, allocator=sched.allocator,
+        allocation=sched.allocation, policy=policy, vms=list(sched.vms),
+        grow_pool=False, **opts)
+    counters["search_candidates"] += len(ranked.candidates)
+    best = ranked.best
+    # the base mapper's own mapping is in the pool, but possibly deduped
+    # under another candidate's name (signature-identical mappers), so look
+    # it up by co-location signature, not by mapper name
+    base_sig = mapping_signature(sched.mapping)
+    base = next((c for c in ranked.candidates
+                 if mapping_signature(c.mapping) == base_sig), None)
+    base_rate = base.max_stable_rate if base is not None else -1.0
+    if best.max_stable_rate > base_rate:
+        counters["search_improved"] += 1
+        return dataclasses.replace(sched, mapping=best.mapping,
+                                   mapper="search", search_winner=best.name)
+    return sched
 
 
 def fleet_resource_surfaces(fleet: FleetPlan, models: ModelsArg,

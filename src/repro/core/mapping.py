@@ -13,10 +13,11 @@ Thread-to-slot mapping operates on:
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
-from collections import defaultdict
+import random
 from typing import Dict, Iterable, List, Mapping as TMapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .allocation import Allocation, TaskAllocation
 from .dag import Dataflow
@@ -116,6 +117,13 @@ class Mapping:
             for s in vm.slot_ids():
                 self.slot_cpu[s] = 1.0
                 self.slot_mem[s] = 1.0
+        # slot → threads index kept in sync by ``assign``: slot lookups are
+        # O(|slot|) instead of O(R) scans over the whole assignment (SAM's
+        # ``next_full_slot`` probes every slot, which used to be O(R·S)).
+        # Entries are created lazily at a slot's first assignment so dict
+        # iteration order matches the old assignment-order scans.
+        self._slot_threads: Dict[SlotId, List[Thread]] = {}
+        self._slot_counts: Dict[SlotId, Dict[str, int]] = {}
 
     # -- assignment ----------------------------------------------------------
     def assign(self, thread: Thread, slot: SlotId,
@@ -125,25 +133,25 @@ class Mapping:
         self.assignment[thread] = slot
         self.slot_cpu[slot] -= cpu
         self.slot_mem[slot] -= mem
+        self._slot_threads.setdefault(slot, []).append(thread)
+        counts = self._slot_counts.setdefault(slot, {})
+        counts[thread.task] = counts.get(thread.task, 0) + 1
 
     # -- views ----------------------------------------------------------------
     def slots(self) -> List[SlotId]:
         return [s for vm in self.vms for s in vm.slot_ids()]
 
     def used_slots(self) -> List[SlotId]:
-        used = {s for s in self.assignment.values()}
+        used = {s for s, ts in self._slot_threads.items() if ts}
         return [s for s in self.slots() if s in used]
 
     def threads_on_slot(self, slot: SlotId) -> List[Thread]:
-        return [t for t, s in self.assignment.items() if s == slot]
+        return list(self._slot_threads.get(slot, ()))
 
     def slot_task_counts(self) -> Dict[SlotId, Dict[str, int]]:
         """Per-slot thread counts grouped by task — the co-location structure
         consumed by the predictor/simulator."""
-        out: Dict[SlotId, Dict[str, int]] = defaultdict(lambda: defaultdict(int))
-        for t, s in self.assignment.items():
-            out[s][t.task] += 1
-        return {s: dict(d) for s, d in out.items()}
+        return {s: dict(c) for s, c in self._slot_counts.items() if c}
 
     def vm_cpu_available(self, vm: VM) -> float:
         return sum(self.slot_cpu[s] for s in vm.slot_ids())
@@ -201,40 +209,60 @@ def map_rsm(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
     a VM's slots, memory% binds per slot.
     """
     mapping = Mapping(vms)
-    # VM-level CPU pool (Storm lets threads use any core of the VM).
-    vm_cpu: Dict[int, float] = {vm.id: vm.num_slots * 1.0 for vm in vms}
-    vm_mem: Dict[int, float] = {vm.id: vm.num_slots * 1.0 for vm in vms}
+    # Per-VM availability ARRAYS (Storm lets threads use any core of the VM,
+    # so CPU% pools VM-wide).  The R-Storm candidate order for one thread is
+    # then a single vectorized lexsort over these arrays instead of a Python
+    # ``sorted`` whose key closure re-reads dicts per comparison — the old
+    # inner sort cost O(V log V) *Python-object* work per thread.  A full
+    # once-per-sweep hoist of the sort itself would change placements: the
+    # distance depends on availability (updated by every assignment) and on
+    # the last-mapped VM's network term, so the *order* is recomputed per
+    # thread, but as one O(V) array pass.
+    avail_cpu = np.array([vm.num_slots * 1.0 for vm in vms])
+    avail_mem = np.array([vm.num_slots * 1.0 for vm in vms])
+    vm_ids = np.array([vm.id for vm in vms], dtype=int)
+    vm_racks = np.array([vm.rack for vm in vms], dtype=int)
     remaining: Dict[str, int] = {n: ta.threads for n, ta in alloc.tasks.items()}
     next_idx: Dict[str, int] = {n: 0 for n in alloc.tasks}
     ref: Optional[VM] = vms[0] if vms else None
     order = [t.name for t in dag.topo_order()]
+    # per-thread needs are rate-independent: hoist them out of the sweep loop
+    needs: Dict[str, Tuple[float, float]] = {}
+    for name, ta in alloc.tasks.items():
+        model = models[ta.kind]
+        if ta.bundle_size > 1:
+            # MBA-style allocation: charge the model-amortized per-thread
+            # resources at the bundle operating point (a 50-thread blob
+            # bundle uses ~96% of a slot, not 50 x 23.9% — §8.5 maps
+            # 25-30 such threads per slot under RSM)
+            needs[name] = (model.C(ta.bundle_size) / ta.bundle_size,
+                           model.M(ta.bundle_size) / ta.bundle_size)
+        else:
+            needs[name] = (model.C(1), model.M(1))
 
     while sum(remaining.values()) > 0:
         progressed = False
         for name in order:
             if remaining[name] <= 0:
                 continue
-            ta = alloc.tasks[name]
-            model = models[ta.kind]
-            if ta.bundle_size > 1:
-                # MBA-style allocation: charge the model-amortized per-thread
-                # resources at the bundle operating point (a 50-thread blob
-                # bundle uses ~96% of a slot, not 50 x 23.9% — §8.5 maps
-                # 25-30 such threads per slot under RSM)
-                c_bar = model.C(ta.bundle_size) / ta.bundle_size
-                m_bar = model.M(ta.bundle_size) / ta.bundle_size
+            c_bar, m_bar = needs[name]
+            # R-Storm distance on available resources, one array pass; the
+            # lexsort (dist primary, VM id tiebreak) reproduces the old
+            # ``sorted(vms, key=lambda v: (dist(v), v.id))`` order exactly
+            if ref is None:
+                net = np.zeros(len(vms))
             else:
-                c_bar, m_bar = model.C(1), model.M(1)
-            # Sort VMs by the R-Storm distance on available resources.
-            def dist(vm: VM) -> float:
-                return (w_mem * (vm_mem[vm.id] - m_bar) ** 2
-                        + w_cpu * (vm_cpu[vm.id] - c_bar) ** 2
-                        + w_net * nw_dist(ref, vm))
+                net = np.where(vm_ids == ref.id, 0.0,
+                               np.where(vm_racks == ref.rack, 0.5, 1.0))
+            d = (w_mem * (avail_mem - m_bar) ** 2
+                 + w_cpu * (avail_cpu - c_bar) ** 2 + w_net * net)
             chosen_slot: Optional[SlotId] = None
             chosen_vm: Optional[VM] = None
-            for vm in sorted(vms, key=lambda v: (dist(v), v.id)):
-                if vm_cpu[vm.id] + 1e-9 < c_bar:
+            chosen_i = -1
+            for i in np.lexsort((vm_ids, d)):
+                if avail_cpu[i] + 1e-9 < c_bar:
                     continue
+                vm = vms[i]
                 # best-fit slot within the VM by remaining memory
                 fitting = [s for s in vm.slot_ids()
                            if mapping.slot_mem[s] + 1e-9 >= m_bar]
@@ -242,14 +270,15 @@ def map_rsm(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
                     continue
                 chosen_slot = min(fitting, key=lambda s: (mapping.slot_mem[s], s.slot))
                 chosen_vm = vm
+                chosen_i = int(i)
                 break
             if chosen_slot is None:
                 raise InsufficientResourcesError(name)
             thread = Thread(name, next_idx[name])
             next_idx[name] += 1
             mapping.assign(thread, chosen_slot, cpu=0.0, mem=m_bar)
-            vm_cpu[chosen_vm.id] -= c_bar
-            vm_mem[chosen_vm.id] -= m_bar
+            avail_cpu[chosen_i] -= c_bar
+            avail_mem[chosen_i] -= m_bar
             remaining[name] -= 1
             ref = chosen_vm
             progressed = True
@@ -363,3 +392,90 @@ MAPPERS = {
     "rsm": map_rsm,
     "sam": map_sam,
 }
+
+
+# ---------------------------------------------------------------------------
+# Candidate-mapping helpers for the simulation-guided search (repro.core.search).
+# ---------------------------------------------------------------------------
+
+def remap_threads(mapping: Mapping,
+                  assignment: TMapping[Thread, SlotId]) -> Mapping:
+    """A fresh :class:`Mapping` on the same VM pool with the given
+    thread→slot assignment.
+
+    The residual cpu/mem bookkeeping is NOT reconstructed (it is
+    mapper-specific accounting); consumers of a *finished* mapping — the
+    predictor, simulator, and search evaluator — read only ``vms`` and the
+    assignment/co-location views.
+    """
+    out = Mapping(mapping.vms)
+    for thread, slot in assignment.items():
+        out.assign(thread, slot)
+    return out
+
+
+def mapping_signature(mapping: Mapping) -> Tuple:
+    """Canonical co-location signature, invariant to slot renaming within a
+    VM: per used slot, ``(vm id, sorted (task, count) contents)``, sorted.
+    Two mappings with equal signatures are physically indistinguishable to
+    the predictor and simulator (same groups, same co-location, same hop
+    structure), so the candidate pool dedupes on it."""
+    return tuple(sorted(
+        (slot.vm, tuple(sorted(counts.items())))
+        for slot, counts in mapping.slot_task_counts().items()))
+
+
+def local_moves(mapping: Mapping, *, n_moves: int = 8, seed: int = 0,
+                max_tries: Optional[int] = None) -> List[Mapping]:
+    """Seeded local perturbations of a base mapping: *swap* the whole thread
+    contents of two used slots (preferring cross-VM pairs — same-VM swaps
+    are physically identity moves and dedupe away), or *migrate* one task's
+    thread bundle to an empty slot.
+
+    Both move kinds preserve every per-(task, slot) group size, so all
+    candidates derived from one base share the base's group-shape signature
+    — the property the search's shape-bucketed vmap evaluation relies on to
+    batch them into ONE compiled kernel.  Returns up to ``n_moves`` distinct
+    (by :func:`mapping_signature`) new mappings.
+    """
+    rng = random.Random(seed)
+    out: List[Mapping] = []
+    seen = {mapping_signature(mapping)}
+    used = mapping.used_slots()
+    used_set = set(used)
+    empty = [s for s in mapping.slots() if s not in used_set]
+    tries = max_tries if max_tries is not None else max(20, n_moves * 20)
+    for _ in range(tries):
+        if len(out) >= n_moves:
+            break
+        assignment = dict(mapping.assignment)
+        if empty and (len(used) < 2 or rng.random() < 0.5):
+            # migrate one (task, slot) bundle to an empty slot
+            src = rng.choice(used)
+            tasks_on = sorted({t.task for t in mapping.threads_on_slot(src)})
+            task = rng.choice(tasks_on)
+            dst = rng.choice(empty)
+            for t in mapping.threads_on_slot(src):
+                if t.task == task:
+                    assignment[t] = dst
+        elif len(used) >= 2:
+            # swap two used slots' whole contents, biased to cross-VM pairs
+            a, b = rng.sample(used, 2)
+            if a.vm == b.vm:
+                cross = [s for s in used if s.vm != a.vm]
+                if cross:
+                    b = rng.choice(cross)
+            for t, s in mapping.assignment.items():
+                if s == a:
+                    assignment[t] = b
+                elif s == b:
+                    assignment[t] = a
+        else:
+            break   # single used slot and nowhere to move: no moves exist
+        cand = remap_threads(mapping, assignment)
+        sig = mapping_signature(cand)
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(cand)
+    return out

@@ -41,6 +41,9 @@ class Schedule:
     mapper: str
     estimated_slots: int     # rho from the allocation
     acquired_slots: int      # slots actually acquired (>= rho on retries)
+    #: with ``mapper="search"``: the winning candidate's name (e.g. "sam" or
+    #: "rsm[2,1,1]+move3") from the simulation-guided search
+    search_winner: Optional[str] = None
 
     @property
     def extra_slots(self) -> int:
@@ -62,7 +65,9 @@ class Schedule:
                                  policy)
 
     def describe(self) -> str:
-        lines = [f"Schedule[{self.allocator}+{self.mapper}] dag={self.dag.name} "
+        mapper = (f"{self.mapper}->{self.search_winner}"
+                  if self.search_winner else self.mapper)
+        lines = [f"Schedule[{self.allocator}+{mapper}] dag={self.dag.name} "
                  f"omega={self.omega:g} slots={self.acquired_slots} "
                  f"(est {self.estimated_slots}, +{self.extra_slots}) "
                  f"threads={self.allocation.total_threads}"]
@@ -77,7 +82,8 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
          *, allocator: str = "mba", mapper: str = "sam",
          vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
          fixed_vms: Optional[Sequence[VM]] = None,
-         grow_fixed_vms: bool = False) -> Schedule:
+         grow_fixed_vms: bool = False,
+         search_opts: Optional[Dict] = None) -> Schedule:
     """Plan a schedule for ``dag`` at input rate ``omega``.
 
     ``fixed_vms`` pins the cluster (the §8.5 five-D3-VM experiments);
@@ -87,11 +93,39 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
     appending fresh 1-slot VMs (ids above the pinned set) instead of
     propagating the mapper failure — the fleet planner's per-DAG path, which
     keeps VM ids unique across a shared pool.
+
+    ``mapper="search"`` replaces the single §7 mapper with the
+    simulation-guided candidate search (:mod:`repro.core.search`): the whole
+    DSM/RSM/SAM + weight-sweep + local-move pool is scored on the vmapped
+    scan engine and the empirically best mapping wins (its candidate name
+    lands in ``Schedule.search_winner``).  ``search_opts`` are keyword
+    overrides for :func:`repro.core.search.search_mapping` (grids, moves,
+    seeds, policy, ...); keys the pipeline owns — pool, allocation,
+    allocator, ``vm_sizes`` — are reserved and raise ``ValueError``.
     """
     alloc = ALLOCATORS[allocator](dag, omega, models)
     rho = alloc.slots
-    map_fn = MAPPERS[mapper]
     fixed = fixed_vms is not None
+
+    if mapper == "search":
+        from .search import RESERVED_SEARCH_OPTS, search_mapping
+        opts = dict(search_opts or {})
+        bad = RESERVED_SEARCH_OPTS & set(opts)
+        if bad:
+            raise ValueError(f"search_opts may not override {sorted(bad)} "
+                             "(owned by the planning pipeline)")
+        ranked = search_mapping(
+            dag, omega, models, allocator=allocator, allocation=alloc,
+            vms=fixed_vms, vm_sizes=vm_sizes,
+            grow_pool=(not fixed) or grow_fixed_vms, **opts)
+        best = ranked.best
+        return Schedule(dag, omega, alloc, list(ranked.vms), best.mapping,
+                        allocator, "search", estimated_slots=rho,
+                        acquired_slots=sum(vm.num_slots
+                                           for vm in ranked.vms),
+                        search_winner=best.name)
+
+    map_fn = MAPPERS[mapper]
 
     if fixed and not grow_fixed_vms:
         vms = list(fixed_vms)
@@ -141,15 +175,27 @@ def replan_on_failure(schedule: Schedule, models: ModelLibrary,
     replacements = [VM(next_id + i, vm.num_slots, vm.rack)
                     for i, vm in enumerate(replacements)]
     vms = survivors + replacements
-    map_fn = MAPPERS[schedule.mapper]
     last_err: Optional[Exception] = None
     for extra in range(MAX_EXTRA_SLOTS + 1):
         try:
-            mapping = map_fn(schedule.dag, schedule.allocation, vms, models)
+            winner = None
+            if schedule.mapper == "search":
+                # simulation-guided schedules replan by re-searching the
+                # surviving pool (DSM always packs, so this converges)
+                from .search import search_mapping
+                ranked = search_mapping(
+                    schedule.dag, schedule.omega, models,
+                    allocator=schedule.allocator,
+                    allocation=schedule.allocation, vms=vms, grow_pool=False)
+                mapping, winner = ranked.best.mapping, ranked.best.name
+            else:
+                mapping = MAPPERS[schedule.mapper](
+                    schedule.dag, schedule.allocation, vms, models)
             return Schedule(schedule.dag, schedule.omega, schedule.allocation,
                             vms, mapping, schedule.allocator, schedule.mapper,
                             estimated_slots=schedule.estimated_slots,
-                            acquired_slots=sum(vm.num_slots for vm in vms))
+                            acquired_slots=sum(vm.num_slots for vm in vms),
+                            search_winner=winner)
         except InsufficientResourcesError as err:
             last_err = err
             vms = vms + [VM(next_id + len(replacements) + extra, 1)]

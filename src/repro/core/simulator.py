@@ -45,6 +45,14 @@ a :class:`~repro.core.fleet.FleetPlan`) in ONE time loop over the union of
 their slot pools — busy time lands on shared slots additively, which is what
 ``repro.core.fleet.simulate_fleet`` uses for fleet predicted-vs-actual
 studies.
+
+Compiled scan kernels are cached at module level keyed by the spec's
+*structural* signature (:func:`get_scan_kernel`): placement data (routing
+fractions, slot ids, hop latencies) is traced, not baked, so every batch,
+``max_stable_rate`` bisection pass, fleet replan, and mapper-search run with
+the same structure reuses one kernel — including the ``jax.vmap``-over-
+candidate-mappings variant the simulation-guided search
+(:mod:`repro.core.search`) evaluates whole candidate pools with.
 """
 
 from __future__ import annotations
@@ -73,6 +81,74 @@ HOP_CROSS_VM = 0.005
 STABLE_SLOPE_PER_S = 1e-3
 
 ENGINES = ("numpy", "scan")
+
+#: Module-level cache of compiled ``lax.scan`` kernels, keyed by the
+#: *structural* signature of a :class:`_SweepSpec` (row slices, in-edge
+#: wiring, sink rows, slot count — everything shape-like).  Placement data
+#: (routing fractions, slot ids, hop latencies) is passed to the kernel as
+#: traced arrays, so two specs that differ only in where threads sit share
+#: ONE compiled kernel.  Repeated searches, ``max_stable_rate`` bisection
+#: passes, and fleet replans therefore stop re-tracing; ``jax.jit``'s own
+#: executable cache (per shape / static args) lives on the cached callable.
+_KERNEL_CACHE: Dict[tuple, object] = {}
+_KERNEL_STATS = {"hits": 0, "misses": 0}
+
+
+def scan_kernel_cache_stats() -> Dict[str, int]:
+    """Hit/miss counters plus compiled-executable counts for the module-level
+    scan-kernel cache (``compiled`` sums each cached callable's jit cache, so
+    a delta of zero between two runs proves zero recompilation)."""
+    compiled = 0
+    for fn in _KERNEL_CACHE.values():
+        size = getattr(fn, "_cache_size", None)
+        compiled += int(size()) if callable(size) else 0
+    return {"entries": len(_KERNEL_CACHE), "hits": _KERNEL_STATS["hits"],
+            "misses": _KERNEL_STATS["misses"], "compiled": compiled}
+
+
+def scan_kernel_cache_clear() -> None:
+    _KERNEL_CACHE.clear()
+    _KERNEL_STATS["hits"] = _KERNEL_STATS["misses"] = 0
+
+
+def _kernel_key(row_slices, in_edges, sink_groups, n_slots: int,
+                batched: bool) -> tuple:
+    return (bool(batched), int(n_slots),
+            tuple((int(lo), int(hi)) for lo, hi in row_slices),
+            tuple(tuple((int(s), float(m)) for s, m in e) for e in in_edges),
+            tuple(tuple(int(r) for r in rows) for rows in sink_groups))
+
+
+def get_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
+                    *, batched: bool = False):
+    """The compiled sweep kernel for one spec structure, from the module
+    cache.  ``batched=True`` returns the ``jax.vmap``-over-candidates variant
+    (leading candidate axis on caps / fractions / slot ids / hops)."""
+    key = _kernel_key(row_slices, in_edges, sink_groups, n_slots, batched)
+    fn = _KERNEL_CACHE.get(key)
+    if fn is None:
+        _KERNEL_STATS["misses"] += 1
+        fn = _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots,
+                               batched=batched)
+        _KERNEL_CACHE[key] = fn
+    else:
+        _KERNEL_STATS["hits"] += 1
+    return fn
+
+
+def _sweep_steps(duration: float, dt: float, warmup: float,
+                 latency_sample_every: float) -> Tuple[int, int, int]:
+    """(steps, sample_every, s0) — the shared discretization of a sweep.
+
+    The measurement window starts at the first tick at or past ``warmup``;
+    runs too short to have one fall back to the whole run (mirroring the
+    latency tail-window fallback in ``results_from_raw``)."""
+    steps = int(duration / dt)
+    sample_every = max(1, int(latency_sample_every / dt))
+    s0 = int(np.ceil(warmup / dt - 1e-9))
+    if s0 >= steps or s0 < 0:
+        s0 = 0
+    return steps, sample_every, s0
 
 
 @dataclasses.dataclass
@@ -139,6 +215,40 @@ class _SweepSpec:
         return len(self.g_frac)
 
 
+def _hop_latency(gi, src_row: int, dst_row: int) -> float:
+    """Expected network hop latency between two tasks' thread groups,
+    weighted by the tuple flow each (src group, dst group) pair actually
+    carries: the source group's routed fraction times the destination
+    group's routing fraction (both rate-independent under either policy).
+
+    An unweighted average would count a 9-thread destination group the
+    same as a 2-thread one; with flow weights, shuffle and slot-aware
+    routing see different expected hop latencies for the same mapping.
+    """
+    sl_s, sl_d = gi.task_slice(src_row), gi.task_slice(dst_row)
+    if sl_s.start == sl_s.stop or sl_d.start == sl_d.stop:
+        return 0.0
+    w = gi.g_frac[sl_s, None] * gi.g_frac[None, sl_d]
+    vm_s = np.array([gi.slots[s].vm for s in gi.g_slot[sl_s]])
+    vm_d = np.array([gi.slots[s].vm for s in gi.g_slot[sl_d]])
+    hop = np.where(gi.g_slot[sl_s, None] == gi.g_slot[None, sl_d],
+                   HOP_SAME_SLOT,
+                   np.where(vm_s[:, None] == vm_d[None, :],
+                            HOP_SAME_VM, HOP_CROSS_VM))
+    total_w = w.sum()
+    if total_w <= 0:        # degenerate zero-fraction groups: fall back
+        return float(hop.mean())
+    return float((w * hop).sum() / total_w)
+
+
+def edge_hop_latencies(gi) -> List[List[float]]:
+    """Per task row, hop latency of each in-edge (rate-independent) for a
+    prebuilt :class:`~repro.core.predictor.GroupIndex` — shared by the
+    simulator and the mapper-search candidate evaluator."""
+    return [[_hop_latency(gi, src, row) for src, _ in gi.in_edges[row]]
+            for row in range(len(gi.tasks))]
+
+
 class DataflowSimulator:
     """Fluid-flow simulation with per-group queues at dt resolution."""
 
@@ -159,45 +269,9 @@ class DataflowSimulator:
         self.groups = slot_groups(mapping, alloc)
         self.rng = random.Random(seed)
         self.gi = build_group_index(dag, alloc, mapping, models, policy)
-        self._hops = self._edge_hop_latencies()
+        self._hops = edge_hop_latencies(self.gi)
         self._sink_rows = [self.gi.task_of[t.name] for t in dag.sinks()]
         self._batch: Optional[SweepBatch] = None
-
-    # -- helpers -------------------------------------------------------------
-    def _hop_latency(self, src_row: int, dst_row: int) -> float:
-        """Expected network hop latency between two tasks' thread groups,
-        weighted by the tuple flow each (src group, dst group) pair actually
-        carries: the source group's routed fraction times the destination
-        group's routing fraction (both rate-independent under either policy).
-
-        An unweighted average would count a 9-thread destination group the
-        same as a 2-thread one; with flow weights, shuffle and slot-aware
-        routing see different expected hop latencies for the same mapping.
-        """
-        gi = self.gi
-        sl_s, sl_d = gi.task_slice(src_row), gi.task_slice(dst_row)
-        if sl_s.start == sl_s.stop or sl_d.start == sl_d.stop:
-            return 0.0
-        w = gi.g_frac[sl_s, None] * gi.g_frac[None, sl_d]
-        vm_s = np.array([gi.slots[s].vm for s in gi.g_slot[sl_s]])
-        vm_d = np.array([gi.slots[s].vm for s in gi.g_slot[sl_d]])
-        hop = np.where(gi.g_slot[sl_s, None] == gi.g_slot[None, sl_d],
-                       HOP_SAME_SLOT,
-                       np.where(vm_s[:, None] == vm_d[None, :],
-                                HOP_SAME_VM, HOP_CROSS_VM))
-        total_w = w.sum()
-        if total_w <= 0:        # degenerate zero-fraction groups: fall back
-            return float(hop.mean())
-        return float((w * hop).sum() / total_w)
-
-    def _edge_hop_latencies(self) -> List[List[float]]:
-        """Per task row, hop latency of each in-edge (rate-independent)."""
-        gi = self.gi
-        hops: List[List[float]] = []
-        for row, name in enumerate(gi.tasks):
-            hops.append([self._hop_latency(src, row)
-                         for src, _ in gi.in_edges[row]])
-        return hops
 
     # -- main entry ------------------------------------------------------------
     def run(self, omega: float, *, duration: float = 60.0, dt: float = 0.05,
@@ -296,7 +370,9 @@ class SweepBatch:
             raise ValueError("SweepBatch needs at least one simulator")
         self.sims = list(sims)
         self._build_spec()
-        self._scan_fn = None
+        parts = [np.asarray(h, dtype=float) for h in self.spec.hops]
+        self._hops_flat = (np.concatenate(parts) if parts
+                           else np.zeros(0, dtype=float))
 
     def _build_spec(self) -> None:
         row_slices: List[Tuple[int, int]] = []
@@ -362,14 +438,8 @@ class SweepBatch:
         src_rate = np.concatenate([
             sim.gi.betas[:, None] * w[None, :]
             for sim, w in zip(self.sims, omegas)], axis=0)
-        steps = int(duration / dt)
-        sample_every = max(1, int(latency_sample_every / dt))
-        # measurement window: ticks at or past warmup; when the run is too
-        # short to have any, fall back to the whole run (mirrors the latency
-        # tail-window fallback below)
-        s0 = int(np.ceil(warmup / dt - 1e-9))
-        if s0 >= steps or s0 < 0:
-            s0 = 0
+        steps, sample_every, s0 = _sweep_steps(duration, dt, warmup,
+                                               latency_sample_every)
         if engine == "scan":
             queues, busy, served, realized, lat = self._run_scan(
                 caps, src_rate, steps, sample_every, s0, dt)
@@ -446,12 +516,16 @@ class SweepBatch:
                   sample_every: int, s0: int, dt: float):
         import jax.numpy as jnp
         from jax.experimental import enable_x64
+        spec = self.spec
+        fn = get_scan_kernel(spec.row_slices, spec.in_edges,
+                             spec.sink_groups, len(spec.slots))
         with enable_x64():
-            if self._scan_fn is None:
-                self._scan_fn = _make_scan_kernel(self.spec)
-            queues, busy, served, realized, lat = self._scan_fn(
+            queues, busy, served, realized, lat = fn(
                 jnp.asarray(caps), jnp.asarray(src_rate),
                 jnp.asarray(dt, dtype=jnp.float64),
+                jnp.asarray(spec.g_frac, dtype=jnp.float64),
+                jnp.asarray(spec.g_slot, dtype=jnp.int32),
+                jnp.asarray(self._hops_flat, dtype=jnp.float64),
                 steps=steps, sample_every=sample_every, s0=s0)
         return (np.asarray(queues), np.asarray(busy), np.asarray(served),
                 np.asarray(realized), np.asarray(lat))
@@ -535,39 +609,52 @@ def _path_latency_np(spec: _SweepSpec, queues: np.ndarray,
     return out
 
 
-def _make_scan_kernel(spec: _SweepSpec):
-    """Build the jitted ``lax.scan`` sweep engine for one :class:`_SweepSpec`.
+def _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
+                      *, batched: bool = False):
+    """Build the jitted ``lax.scan`` sweep engine for one spec *structure*.
 
     The task loop is unrolled at trace time (T is small and static): each
-    row's group block is a static slice of the ``(G, K)`` state, in-edge
-    gathers and hop latencies are baked-in constants, and the per-tick
-    scatter onto slots uses ``.at[g_slot].add``.  Latency rows are written
-    into an ``(n_samples, ...)`` carry buffer only on sample ticks
-    (``lax.cond``), and final realized rates ride along in the carry.
-    Compiled once per (K, steps, sample_every, s0) shape; ``dt`` stays a
-    traced scalar.
+    row's group block is a static slice of the ``(G, K)`` state and in-edge
+    gathers are baked-in constants.  Placement data — routing fractions,
+    group→slot ids, per-edge hop latencies — arrives as traced arrays, so
+    every mapping with the same structure (same per-row group spans) reuses
+    this kernel; the per-tick scatter onto slots uses ``.at[g_slot].add``.
+    Latency rows are written into an ``(n_samples, ...)`` carry buffer only
+    on sample ticks (``lax.cond``), and final realized rates ride along in
+    the carry.  Compiled once per (K, steps, sample_every, s0) shape; ``dt``
+    stays a traced scalar.
+
+    With ``batched=True`` the kernel is ``jax.vmap``-ed over a leading
+    *candidate* axis on ``caps``/``g_frac``/``g_slot``/``hops`` (``src_rate``
+    and ``dt`` are shared), which is how the mapper search evaluates a whole
+    pool of candidate mappings of one DAG in a single XLA program.
     """
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    T, G = spec.n_rows, spec.n_groups
-    S = len(spec.slots)
-    row_slices = list(spec.row_slices)
-    in_edges = [list(e) for e in spec.in_edges]
-    hops = [list(h) for h in spec.hops]
-    sink_groups = [list(r) for r in spec.sink_groups]
+    row_slices = [(int(lo), int(hi)) for lo, hi in row_slices]
+    in_edges = [[(int(s), float(m)) for s, m in e] for e in in_edges]
+    sink_groups = [[int(r) for r in rows] for rows in sink_groups]
+    T = len(row_slices)
+    G = max((hi for _, hi in row_slices), default=0)
+    S = int(n_slots)
     n_out = len(sink_groups)
-    g_frac_c = np.asarray(spec.g_frac, dtype=np.float64)
-    g_slot_c = np.asarray(spec.g_slot, dtype=np.int32)
-    g_task_c = np.asarray(spec.g_task, dtype=np.int32)
+    # static offsets of each row's in-edges within the flat hops array
+    hop_off = np.concatenate(
+        [[0], np.cumsum([len(e) for e in in_edges])]).astype(int)
+    g_task_c = np.zeros(G, dtype=np.int32)
+    for row, (lo, hi) in enumerate(row_slices):
+        g_task_c[lo:hi] = row
 
-    def kernel(caps, src_rate, dt, *, steps, sample_every, s0):
+    def kernel(caps, src_rate, dt, g_frac, g_slot, hops,
+               *, steps, sample_every, s0):
         K = caps.shape[1]
         cap_pos = caps > 0
         safe_caps = jnp.where(cap_pos, caps, 1.0)
         caps_dt = caps * dt
-        frac = jnp.asarray(g_frac_c)[:, None]
+        frac = g_frac[:, None]
+        g_slot_i = g_slot.astype(jnp.int32)
 
         def path_latency(queues):
             contrib = jnp.where(cap_pos, frac * (queues + 1.0) / safe_caps,
@@ -580,8 +667,8 @@ def _make_scan_kernel(spec: _SweepSpec):
                     best[row] = per_task[row]
                     continue
                 up = None
-                for (src, _), hop in zip(in_edges[row], hops[row]):
-                    cand = best[src] + hop
+                for j, (src, _) in enumerate(in_edges[row]):
+                    cand = best[src] + hops[hop_off[row] + j]
                     up = cand if up is None else jnp.maximum(up, cand)
                 best[row] = per_task[row] + up
             rows_out = []
@@ -627,7 +714,7 @@ def _make_scan_kernel(spec: _SweepSpec):
                 srv_all = jnp.zeros_like(queues)
             in_window = step >= s0
             busy_inc = jnp.where(cap_pos, srv_all / safe_caps, 0.0)
-            busy = busy.at[jnp.asarray(g_slot_c)].add(
+            busy = busy.at[g_slot_i].add(
                 jnp.where(in_window, busy_inc, 0.0))
             served_acc = served_acc + jnp.where(in_window, srv_all, 0.0)
             # only sample ticks write a latency row, so the carry buffer is
@@ -649,7 +736,19 @@ def _make_scan_kernel(spec: _SweepSpec):
             tick, init, jnp.arange(steps))
         return queues, busy, served_acc, realized, lat
 
-    return jax.jit(kernel, static_argnames=("steps", "sample_every", "s0"))
+    if not batched:
+        return jax.jit(kernel, static_argnames=("steps", "sample_every",
+                                                "s0"))
+
+    def batched_kernel(caps, src_rate, dt, g_frac, g_slot, hops,
+                       *, steps, sample_every, s0):
+        def one(c, f, s, h):
+            return kernel(c, src_rate, dt, f, s, h, steps=steps,
+                          sample_every=sample_every, s0=s0)
+        return jax.vmap(one)(caps, g_frac, g_slot, hops)
+
+    return jax.jit(batched_kernel, static_argnames=("steps", "sample_every",
+                                                    "s0"))
 
 
 def _slope_columns(samples: np.ndarray) -> np.ndarray:

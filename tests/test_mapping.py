@@ -108,6 +108,37 @@ def test_sam_mixed_slots_bounded(lib):
         assert mapping.mixed_slots() <= 3
 
 
+@pytest.mark.parametrize("mapper_name", ["dsm", "rsm", "sam"])
+def test_slot_index_matches_assignment_scan(lib, mapper_name):
+    """The slot→threads index kept by ``assign`` agrees with brute-force
+    scans over the raw assignment (the old O(R·S) implementation)."""
+    from repro.core.mapping import MAPPERS
+    dag = linear_dag()
+    alloc = allocate_mba(dag, 100, lib)
+    mapping = MAPPERS[mapper_name](dag, alloc, acquire_vms(alloc.slots + 4),
+                                   lib)
+    for s in mapping.slots():
+        assert mapping.threads_on_slot(s) == \
+            [t for t, slot in mapping.assignment.items() if slot == s]
+    brute = {}
+    for t, s in mapping.assignment.items():
+        brute.setdefault(s, {}).setdefault(t.task, 0)
+        brute[s][t.task] += 1
+    assert mapping.slot_task_counts() == brute
+
+
+def test_rsm_weight_variants_are_valid_mappings(lib):
+    """The search's RSM weight sweep: every weighting maps every thread and
+    respects per-slot memory."""
+    dag = linear_dag()
+    alloc = allocate_mba(dag, 100, lib)
+    vms = acquire_vms(alloc.slots + 4)
+    threads = set(make_threads(alloc))
+    for w in ((2.0, 1.0, 1.0), (1.0, 2.0, 1.0), (1.0, 1.0, 0.0)):
+        m = map_rsm(dag, alloc, vms, lib, w_cpu=w[0], w_mem=w[1], w_net=w[2])
+        assert set(m.assignment) == threads
+
+
 def test_sam_uses_fewer_slots_than_dsm_spreads(lib):
     dag = linear_dag()
     alloc = allocate_mba(dag, 100, lib)
