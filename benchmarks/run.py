@@ -12,9 +12,9 @@ import json
 import sys
 
 from . import (bench_app_dags, bench_fleet, bench_latency,
-               bench_mapper_search, bench_micro_dags, bench_optimized,
-               bench_perfmodels, bench_predictability, bench_roofline,
-               bench_serving, bench_sweep)
+               bench_mapper_search, bench_micro_dags, bench_online,
+               bench_optimized, bench_perfmodels, bench_predictability,
+               bench_roofline, bench_serving, bench_sweep)
 from .common import timed
 
 BENCHES = [
@@ -26,6 +26,7 @@ BENCHES = [
     ("sweep_engine", bench_sweep.run),
     ("mapper_search", bench_mapper_search.run),
     ("fleet_planner", bench_fleet.run),
+    ("online_controller", bench_online.run),
     ("serving_planner", bench_serving.run),
     ("roofline_table", bench_roofline.run),
     ("perf_optimized", bench_optimized.run),
@@ -36,7 +37,8 @@ def main() -> None:
     if "--smoke" in sys.argv[1:]:
         rows = []
         for name, fn in (("sweep_smoke", bench_sweep.smoke),
-                         ("mapper_search_smoke", bench_mapper_search.smoke)):
+                         ("mapper_search_smoke", bench_mapper_search.smoke),
+                         ("online_controller_smoke", bench_online.smoke)):
             derived, us = timed(fn)
             rows.append((name, us, derived))
         print("\nname,us_per_call,derived")

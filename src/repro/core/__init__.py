@@ -12,6 +12,8 @@ Public surface:
 * multi-DAG fleet planning over one shared slot budget (``fleet``)
 * simulation-guided mapper search — candidate pools scored on the vmapped
   scan engine (``search``)
+* online elastic fleet control — event-driven incremental replanning on
+  cached slot surfaces (``online``)
 """
 
 from .dag import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Edge, Routing,
@@ -35,7 +37,12 @@ from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
                         predict_resources, predict_resources_sweep)
 from .scheduler import Schedule, max_planned_rate, plan, replan_on_failure
 from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
-                    fleet_resource_surfaces, plan_fleet, simulate_fleet)
+                    RateDecision, SlotSurfaceCache, UnsupportableDagError,
+                    fleet_resource_surfaces, plan_fleet, replan_incremental,
+                    simulate_fleet)
+from .online import (ControllerLog, ControllerRecord, DagArrive, DagDepart,
+                     Event, EventTrace, FleetController, RateChange, VmAdd,
+                     VmFail)
 from .simulator import (DataflowSimulator, SimResult, SweepBatch, SweepRaw,
                         measured_resources, scan_kernel_cache_clear,
                         scan_kernel_cache_stats)

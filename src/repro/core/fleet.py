@@ -35,12 +35,16 @@ Objectives
               proportional to the weights (proportional throughput
               shares) until grid granularity or a DAG's feasibility
               ceiling binds, then water-filling continues in ratio
-              space.  The minimum ratio is provably maximal (any higher
-              minimum needs every DAG at or past its chosen point, which
-              exceeds the budget); positions beyond the minimum are
-              greedy — exactly optimal on ``max_min``'s uniform grid,
-              best-effort for unequal weights where DAGs step by
-              different ratio increments.
+              space.  Equal weights share ``max_min``'s uniform ratio
+              ladder, where the greedy water-fill is exactly optimal;
+              unequal weights step DAGs by different ratio increments,
+              so the fill switches to the exact recursive bottleneck
+              solver (:func:`_fill_exact`): maximize the minimum ratio
+              by level bisection, freeze the DAGs that provably cannot
+              exceed it, recurse on the rest — branching over the tied
+              bottleneck only when joint advancement is unaffordable.
+              Both paths are pinned against brute-force budget
+              partitions in ``tests/test_fleet.py``.
 ``priority``  strict tiers with preemption order: higher-priority DAGs
               are planned first (weighted max-min within a tier, so
               ``weights`` compose with tiers) and lower tiers split what
@@ -61,6 +65,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .allocation import UnsupportableRateError
 from .batch import batch_slots, bisect_largest_true, prefix_feasible_count
 from .dag import Dataflow
 from .mapping import DEFAULT_VM_SIZES, VM, SlotId, acquire_vms
@@ -75,6 +80,23 @@ from .simulator import DataflowSimulator, SimResult, SweepBatch
 ModelsArg = Union[ModelLibrary, Mapping[str, ModelLibrary]]
 
 OBJECTIVES = ("max_min", "weighted", "priority")
+
+
+class UnsupportableDagError(UnsupportableRateError):
+    """A DAG cannot run in this fleet even at the grid's floor rate: its
+    slot estimate at ``grid[0]`` exceeds the whole budget (or the rate is
+    unsupportable outright).  Raised by :func:`plan_fleet` and the online
+    controller's admission path instead of silently planning the DAG at
+    zero rate — a *contended* zero rate (priority preemption, crowded
+    budget) is normal and does not raise."""
+
+    def __init__(self, dag: str, floor_rate: float, budget_slots: int):
+        super().__init__(
+            dag, floor_rate,
+            f"DAG {dag!r} does not fit {budget_slots} slots even at its "
+            f"floor rate {floor_rate:g} t/s")
+        self.dag = dag
+        self.budget_slots = budget_slots
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +147,14 @@ def _water_fill(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
     """Greedy lexicographic water-fill of the leftover budget: repeatedly
     advance the DAG with the lowest current ``rate/weight`` (cheapest next
     increment among ties) by one grid step; freeze it when its next step no
-    longer fits.  Increment costs are nondecreasing, so frozen stays frozen."""
+    longer fits.  Increment costs are nondecreasing, so frozen stays frozen.
+
+    Exactly optimal when every DAG climbs the same ratio ladder (equal
+    weights on the shared grid): ties at the minimum are then resolved by
+    the cheapest increment, which maximizes how many DAGs advance.  With
+    *unequal* weights the cheapest tied step can strand budget a pricier
+    tied DAG would have turned into a higher ratio — :func:`_fill_exact`
+    handles that case; :func:`_plan_rates` dispatches."""
     idx = idx.copy()
     total = _cost(slots, idx)
 
@@ -151,11 +180,267 @@ def _water_fill(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
     return idx
 
 
+def _fill_exact(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
+                weights: np.ndarray, budget: int) -> np.ndarray:
+    """Exact lexicographic water-fill for unequal-weight ratio ladders.
+
+    Recursive bottleneck solver: maximize the minimum ``rate/weight`` by a
+    level bisection (each DAG at its *cheapest* grid point at or above the
+    level), then freeze every DAG that provably cannot exceed that level —
+    its next step is unaffordable even with all others at their cheapest
+    level positions, and increment costs are nondecreasing, so it never
+    becomes affordable — and recurse on the rest with the leftover budget.
+    When no DAG is individually stuck but the level still cannot rise (the
+    tied DAGs cannot all afford their next step *jointly*), exactly one
+    tied DAG must stay at the level: branch over the candidates and keep
+    the lexicographically best sorted ratio vector.  The branch is bounded
+    by the fleet size and only triggers on joint-affordability ties, so
+    the common case stays O(D log(D·K)) array probes."""
+
+    def min_idx(d: int, theta: float) -> Optional[int]:
+        """Cheapest grid index with ``grid[j]/weight >= theta`` (-1 = zero
+        rate for theta <= 0); None when the DAG cannot reach ``theta``
+        within its feasible prefix."""
+        if theta <= 0:
+            return -1
+        j = int(np.searchsorted(grid, weights[d] * theta * (1 - 1e-12),
+                                side="left"))
+        return j if j < caps[d] else None
+
+    def cost(d: int, j: int) -> int:
+        return int(slots[d, j]) if j >= 0 else 0
+
+    def ratio(d: int, j: int) -> float:
+        return float(grid[j] / weights[d]) if j >= 0 else 0.0
+
+    def solve(active: List[int], b: int) -> Dict[int, int]:
+        if not active:
+            return {}
+        ladders = [grid[:caps[d]] / weights[d] for d in active if caps[d] > 0]
+        levels = (np.unique(np.concatenate([np.zeros(1)] + ladders))
+                  if ladders else np.zeros(1))
+
+        def fits(k: int) -> bool:
+            total = 0
+            for d in active:
+                j = min_idx(d, float(levels[k]))
+                if j is None:
+                    return False
+                total += cost(d, j)
+            return total <= b
+
+        # level 0.0 always fits (zero rate costs nothing), so best >= 0
+        best = bisect_largest_true(fits, len(levels))
+        m_star = float(levels[best]) if best >= 0 else 0.0
+        base = {d: min_idx(d, m_star) for d in active}
+        base_cost = sum(cost(d, j) for d, j in base.items())
+        stuck = []
+        for d in active:
+            nxt = base[d] + 1
+            if nxt >= caps[d] or \
+                    base_cost - cost(d, base[d]) + int(slots[d, nxt]) > b:
+                stuck.append(d)
+        if stuck:
+            rest = [d for d in active if d not in stuck]
+            sub = solve(rest, b - sum(cost(d, base[d]) for d in stuck))
+            sub.update({d: base[d] for d in stuck})
+            return sub
+        # every bottleneck DAG could advance alone, yet the level cannot
+        # rise: they cannot all afford the step jointly, so exactly one DAG
+        # at the minimum ratio must stay — branch over which
+        rmin = min(ratio(d, base[d]) for d in active)
+        at_level = [d for d in active
+                    if ratio(d, base[d]) <= rmin * (1 + 1e-9) + 1e-12]
+        best_sol: Dict[int, int] = {}
+        best_key = None
+        for c in at_level:
+            rest = [d for d in active if d != c]
+            sub = solve(rest, b - cost(c, base[c]))
+            sub[c] = base[c]
+            key = tuple(sorted(ratio(d, j) for d, j in sub.items()))
+            if best_key is None or key > best_key:
+                best_sol, best_key = sub, key
+        return best_sol
+
+    sol = solve(list(range(len(weights))), int(budget))
+    return np.array([sol[d] for d in range(len(weights))], dtype=int)
+
+
 def _plan_rates(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
                 weights: np.ndarray, budget: int) -> np.ndarray:
-    """Joint bisection to the common fairness level, then water-fill."""
+    """Joint bisection to the common fairness level, then water-fill; with
+    unequal weights the greedy fill is not exact (DAGs step by different
+    ratio increments), so the recursive bottleneck solver runs instead."""
+    if len(weights) and float(np.ptp(weights)) > 1e-12:
+        return _fill_exact(grid, slots, caps, weights, budget)
     idx = _bisect_common_level(grid, slots, caps, weights, budget)
     return _water_fill(grid, slots, caps, weights, budget, idx)
+
+
+# ---------------------------------------------------------------------------
+# Cached per-DAG slot surfaces + the shared rate-selection pass.
+# ---------------------------------------------------------------------------
+
+class SlotSurfaceCache:
+    """Per-DAG ``(rate x slots)`` surfaces on one shared grid, computed at
+    most once per DAG.
+
+    The surface — :func:`~repro.core.batch.batch_slots` over the grid — is
+    all the allocator work fleet rate selection ever needs, and it only
+    depends on (dag, models, allocator, grid), never on the budget or the
+    rest of the fleet.  Caching it is what makes event-driven replanning
+    incremental: :func:`replan_incremental` re-runs the joint level
+    bisection + water-fill as pure array probes over the cached rows, and a
+    new surface is computed solely when a DAG first *arrives*.
+    ``stats`` counts ``batch_passes`` (vectorized grid computations) and
+    ``hits`` (reuses)."""
+
+    def __init__(self, *, allocator: str = "mba", step: float = 10.0,
+                 max_rate: float = 1e4):
+        self.allocator = allocator
+        self.step = float(step)
+        self.max_rate = float(max_rate)
+        self.grid = step * np.arange(1, int(max_rate / step) + 1)
+        self._rows: Dict[str, np.ndarray] = {}
+        self._prints: Dict[str, Tuple] = {}
+        self.stats = {"batch_passes": 0, "hits": 0}
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._rows
+
+    @staticmethod
+    def _fingerprint(dag: Dataflow) -> Tuple:
+        """Structural identity of a DAG: the surface depends only on task
+        kinds and edge selectivities (via the rate coefficients), so a
+        renamed *object* with the same structure is a legitimate hit,
+        while a different dataflow reusing a cached name must not be."""
+        return (dag.name,
+                tuple(sorted((t.name, t.kind) for t in dag.tasks.values())),
+                tuple(sorted((e.src, e.dst, e.selectivity)
+                             for e in dag.edges)))
+
+    def surface(self, name: str, dag: Dataflow,
+                models: ModelLibrary) -> np.ndarray:
+        """The cached slot row for ``name``, computing it on first use.
+        A structurally different DAG under a cached name raises
+        ``ValueError`` rather than silently returning the stale row (the
+        models are assumed stable per name for the cache's lifetime)."""
+        row = self._rows.get(name)
+        if row is None:
+            self.stats["batch_passes"] += 1
+            row = batch_slots(dag, self.grid, models, self.allocator,
+                              clip_unsupportable=True)
+            self._rows[name] = row
+            self._prints[name] = self._fingerprint(dag)
+        else:
+            if self._prints[name] != self._fingerprint(dag):
+                raise ValueError(
+                    f"surface cache holds a structurally different DAG "
+                    f"under the name {name!r}; drop() it first")
+            self.stats["hits"] += 1
+        return row
+
+    def row(self, name: str) -> np.ndarray:
+        """The cached row, without computing (KeyError when absent)."""
+        return self._rows[name]
+
+    def drop(self, name: str) -> None:
+        """Forget a departed DAG's surface."""
+        self._rows.pop(name, None)
+        self._prints.pop(name, None)
+
+
+def _caps_for(grid: np.ndarray, slots: np.ndarray, names: Sequence[str],
+              budget_slots: int,
+              max_rates: Optional[Mapping[str, float]] = None,
+              *, floor_check: bool = True) -> np.ndarray:
+    """Per-DAG feasible-prefix lengths under ``budget_slots``, clamped by
+    each DAG's offered-load ceiling (``max_rates``, t/s).  With
+    ``floor_check`` a DAG that cannot fit the whole budget even at the
+    grid's first rate raises :class:`UnsupportableDagError` — a demand
+    ceiling of zero, by contrast, is a legitimate throttle and never
+    raises."""
+    caps = np.empty(len(names), dtype=int)
+    for d, name in enumerate(names):
+        cap = prefix_feasible_count(slots[d] <= budget_slots)
+        if cap == 0 and floor_check:
+            raise UnsupportableDagError(name, float(grid[0]),
+                                        int(budget_slots))
+        demand = (max_rates or {}).get(name)
+        if demand is not None and np.isfinite(demand):
+            cap = min(cap, int(np.searchsorted(grid, demand * (1 + 1e-12),
+                                               side="right")))
+        caps[d] = cap
+    return caps
+
+
+def _select_rates(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
+                  weights: np.ndarray, prio: np.ndarray, objective: str,
+                  budget_slots: int) -> np.ndarray:
+    """Joint per-DAG grid indices under ``objective`` — the pure rate
+    selection shared by :func:`plan_fleet` and :func:`replan_incremental`
+    (identical inputs give identical rates by construction)."""
+    D = len(weights)
+    if objective == "priority":
+        idx = np.full(D, -1, dtype=int)
+        residual = budget_slots
+        for p in sorted(set(prio.tolist()), reverse=True):
+            tier = np.flatnonzero(prio == p)
+            if residual <= 0:
+                break
+            tier_idx = _plan_rates(grid, slots[tier], caps[tier],
+                                   weights[tier], residual)
+            idx[tier] = tier_idx
+            residual -= _cost(slots[tier], tier_idx)
+        return idx
+    use_w = weights if objective == "weighted" else np.ones(D)
+    return _plan_rates(grid, slots, caps, use_w, budget_slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class RateDecision:
+    """One DAG's share of an incremental rate-selection pass."""
+
+    name: str
+    omega: float                 # planned rate (0.0 = contended out)
+    grid_index: int              # index into the shared grid, -1 for 0.0
+    estimated_slots: int         # slot estimate at the planned rate
+
+
+def replan_incremental(cache: SlotSurfaceCache, names: Sequence[str], *,
+                       budget_slots: int, objective: str = "max_min",
+                       weights: Optional[Mapping[str, float]] = None,
+                       priorities: Optional[Mapping[str, int]] = None,
+                       max_rates: Optional[Mapping[str, float]] = None
+                       ) -> Dict[str, RateDecision]:
+    """Re-run ONLY the joint rate selection over cached slot surfaces.
+
+    The incremental counterpart of :func:`plan_fleet` steps 1–2: every DAG
+    in ``names`` must already have a surface in ``cache`` (arrivals compute
+    theirs via :meth:`SlotSurfaceCache.surface` first), and the level
+    bisection + water-fill run as array probes with ZERO allocator calls.
+    Produces rates identical to a full ``plan_fleet`` of the same DAG set,
+    budget, and objective — the contract the online controller's tests
+    pin."""
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown fleet objective {objective!r}")
+    if budget_slots <= 0:
+        raise ValueError("budget_slots must be positive")
+    if not names:
+        return {}
+    w = np.array([float((weights or {}).get(n, 1.0)) for n in names])
+    if np.any(w <= 0):
+        raise ValueError("weights must be positive")
+    prio = np.array([int((priorities or {}).get(n, 0)) for n in names])
+    slots = np.stack([cache.row(n) for n in names])
+    caps = _caps_for(cache.grid, slots, names, budget_slots, max_rates)
+    idx = _select_rates(cache.grid, slots, caps, w, prio, objective,
+                        budget_slots)
+    return {n: RateDecision(
+        name=n, omega=float(cache.grid[idx[d]]) if idx[d] >= 0 else 0.0,
+        grid_index=int(idx[d]),
+        estimated_slots=int(slots[d, idx[d]]) if idx[d] >= 0 else 0)
+        for d, n in enumerate(names)}
 
 
 # ---------------------------------------------------------------------------
@@ -277,12 +562,14 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
                objective: str = "max_min",
                weights: Optional[Mapping[str, float]] = None,
                priorities: Optional[Mapping[str, int]] = None,
+               max_rates: Optional[Mapping[str, float]] = None,
                allocator: str = "mba", mapper: Optional[str] = "sam",
                step: float = 10.0, max_rate: float = 1e4,
                vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
                policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
                refine_search: bool = False,
                search_opts: Optional[Dict] = None,
+               surface_cache: Optional[SlotSurfaceCache] = None,
                stats: Optional[Dict[str, int]] = None) -> FleetPlan:
     """Share ``budget_slots`` across ``dags`` under ``objective``.
 
@@ -291,8 +578,17 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
     libraries (multi-tenant fleets profile their own task kinds).
     ``weights`` (default 1.0) scale the ``weighted`` objective;
     ``priorities`` (default 0, larger = more important) define the
-    ``priority`` tiers.  ``mapper=None`` plans rates only (no VM pool, no
-    thread mappings) — the pure array-pass path used for optimality tests.
+    ``priority`` tiers.  ``max_rates`` (optional, t/s per DAG name) caps a
+    DAG's planned rate at its offered load, releasing the budget beyond it
+    to the rest of the fleet.  ``mapper=None`` plans rates only (no VM
+    pool, no thread mappings) — the pure array-pass path used for
+    optimality tests.  A DAG that cannot fit ``budget_slots`` even at the
+    grid's floor rate raises :class:`UnsupportableDagError` (a *contended*
+    zero rate under budget pressure stays a normal plan entry).
+
+    ``surface_cache`` reuses / persists the per-DAG slot surfaces (its
+    allocator and grid must match this call); cached DAGs skip their
+    vectorized grid pass entirely — the online controller's path.
 
     ``refine_search`` runs the opt-in simulation-guided refinement pass
     (:func:`repro.core.search.search_mapping`) over each planned DAG's
@@ -333,31 +629,34 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
         counters.setdefault("search_candidates", 0)
         counters.setdefault("search_improved", 0)
 
-    # 1. the whole (dag x rate) slot surface, one array pass per DAG
-    grid = step * np.arange(1, int(max_rate / step) + 1)
-    slots = np.empty((D, len(grid)), dtype=np.int64)
-    for d, n in enumerate(names):
-        counters["batch_passes"] += 1
-        slots[d] = batch_slots(dag_map[n], grid, _models_for(models, n),
-                               allocator, clip_unsupportable=True)
-    caps = np.array([prefix_feasible_count(slots[d] <= budget_slots)
-                     for d in range(D)])
+    # 1. the whole (dag x rate) slot surface, one array pass per DAG —
+    # skipped per DAG when a surface cache already holds its row
+    if surface_cache is not None:
+        if surface_cache.allocator != allocator:
+            raise ValueError(
+                f"surface cache allocator {surface_cache.allocator!r} does "
+                f"not match plan_fleet allocator {allocator!r}")
+        if surface_cache.step != step or surface_cache.max_rate != max_rate:
+            raise ValueError("surface cache grid does not match "
+                             "plan_fleet step/max_rate")
+        grid = surface_cache.grid
+        passes0 = surface_cache.stats["batch_passes"]
+        slots = np.stack([surface_cache.surface(n, dag_map[n],
+                                                _models_for(models, n))
+                          for n in names])
+        counters["batch_passes"] += \
+            surface_cache.stats["batch_passes"] - passes0
+    else:
+        grid = step * np.arange(1, int(max_rate / step) + 1)
+        slots = np.empty((D, len(grid)), dtype=np.int64)
+        for d, n in enumerate(names):
+            counters["batch_passes"] += 1
+            slots[d] = batch_slots(dag_map[n], grid, _models_for(models, n),
+                                   allocator, clip_unsupportable=True)
+    caps = _caps_for(grid, slots, names, budget_slots, max_rates)
 
     # 2. joint rate selection
-    if objective == "priority":
-        idx = np.full(D, -1, dtype=int)
-        residual = budget_slots
-        for p in sorted(set(prio), reverse=True):
-            tier = np.flatnonzero(prio == p)
-            if residual <= 0:
-                break
-            tier_idx = _plan_rates(grid, slots[tier], caps[tier],
-                                   w[tier], residual)
-            idx[tier] = tier_idx
-            residual -= _cost(slots[tier], tier_idx)
-    else:
-        use_w = w if objective == "weighted" else np.ones(D)
-        idx = _plan_rates(grid, slots, caps, use_w, budget_slots)
+    idx = _select_rates(grid, slots, caps, w, prio, objective, budget_slots)
 
     # 3. map each planned DAG onto its share of one common VM pool: §7.1
     # acquisition per DAG (D3/D2/D1 sizes cover rho exactly), fleet-unique
@@ -546,7 +845,8 @@ def simulate_fleet(fleet: FleetPlan, models: ModelsArg, *,
                    warmup: float = 5.0, latency_sample_every: float = 0.25,
                    engine: str = "scan",
                    policy: Optional[RoutingPolicy] = None,
-                   cpu_penalty: bool = True) -> FleetSimReport:
+                   cpu_penalty: bool = True,
+                   reuse_group_index: bool = False) -> FleetSimReport:
     """Co-simulate every planned DAG's rate sweep in ONE batched time loop.
 
     Each mapped DAG is swept over ``fractions`` of its planned rate (the
@@ -556,6 +856,13 @@ def simulate_fleet(fleet: FleetPlan, models: ModelsArg, *,
     ``lax.scan`` for the entire fleet.  Reports per-DAG
     planned/predicted/actual max rates and fleet per-VM predicted-vs-actual
     CPU/mem at the planned operating point.
+
+    ``reuse_group_index`` (opt-in) skips rebuilding each entry's
+    :class:`GroupIndex` by reusing the one cached on the plan — valid ONLY
+    when ``models`` is the library the plan was built with and ``policy``
+    is the plan's (the index bakes in per-group capacities and routing
+    fractions).  The online controller's repeated between-event
+    co-simulations use it; one-off studies should leave it off.
     """
     fracs = (np.asarray(fractions, dtype=float) if fractions is not None
              else np.linspace(0.25, 1.25, 9))
@@ -575,7 +882,9 @@ def simulate_fleet(fleet: FleetPlan, models: ModelsArg, *,
                          "(was it planned with mapper=None?)")
     sims = [DataflowSimulator(e.dag, e.schedule.allocation,
                               e.schedule.mapping, _models_for(models, e.name),
-                              policy=policy, cpu_penalty=cpu_penalty)
+                              policy=policy, cpu_penalty=cpu_penalty,
+                              gi=(e.group_index if reuse_group_index
+                                  and policy is fleet.policy else None))
             for e in runnable]
     batch = SweepBatch(sims)
     omegas_list = [fracs * e.omega for e in runnable]

@@ -1,0 +1,533 @@
+"""Online elastic fleet control: event-driven incremental replanning.
+
+:func:`~repro.core.fleet.plan_fleet` answers the *static* fleet question —
+but the paper's whole premise is dynamic input: DAGs arrive and depart, VMs
+fail, offered load drifts.  This module adds the runtime layer that keeps a
+live :class:`~repro.core.fleet.FleetPlan` current without ever replanning
+the whole fleet from scratch.
+
+Event model
+-----------
+A fleet changes through five typed events, replayed from an
+:class:`EventTrace` (a time-ordered ``(time, event)`` sequence) or applied
+one at a time with :meth:`FleetController.apply`:
+
+``DagArrive``   a new dataflow asks for admission (weight / priority /
+                optional offered-load ceiling).  This is the ONLY event
+                that computes a new slot surface — one
+                :func:`~repro.core.batch.batch_slots` grid pass, cached in
+                the controller's :class:`~repro.core.fleet.SlotSurfaceCache`
+                for the DAG's lifetime.  An arrival that cannot fit the
+                budget even at the grid's floor rate is rejected with
+                :class:`~repro.core.fleet.UnsupportableDagError` (naming
+                the DAG) and leaves the fleet untouched.
+``DagDepart``   a dataflow leaves; its surface is dropped and its VMs are
+                released.  Freed budget water-fills to the remaining DAGs.
+``VmFail``      one VM dies.  Planned rates are unchanged (replacement
+                capacity is re-acquired per §7.1); the owning DAG's
+                schedule is repaired with
+                ``replan_on_failure(keep_survivors=True)`` — each failed
+                slot's threads transplant as a unit onto a fresh slot, so
+                ONLY threads that sat on the failed VM move.
+``VmAdd``       the cluster grows by N slots; the extra budget water-fills
+                across the fleet.
+``RateChange``  a DAG's offered load changed: its planned rate is capped at
+                the new ceiling (``None`` removes the cap), releasing — or
+                reclaiming — budget for the rest of the fleet.
+
+Incremental replanning
+----------------------
+On every event the controller re-runs ONLY the joint level bisection +
+water-fill (:func:`~repro.core.fleet.replan_incremental`) over the cached
+per-DAG ``(rate x slots)`` surfaces — pure array probes, zero allocator
+calls — producing rates *identical* to a full ``plan_fleet`` of the same
+DAG set, budget, and objective.
+
+Delta semantics
+---------------
+The new rates are applied as a migration-cost-aware diff against the live
+per-DAG :class:`~repro.core.scheduler.Schedule`\\ s:
+
+* a DAG whose planned rate is unchanged (and whose VMs did not fail) keeps
+  its ``Schedule`` object — mappings stay bit-identical, zero threads move
+  (:func:`~repro.core.mapping.mapping_signature` is the invariance
+  contract the tests pin);
+* a DAG whose rate changed is re-planned *on its own incumbent VMs* (grown
+  with fresh fleet-unique VMs only when the new slot estimate outgrows
+  them, trimmed of VMs left empty when it shrinks), so churn stays inside
+  the DAG that changed;
+* with ``mapper="search"`` the incumbent mapping is passed to
+  :func:`~repro.core.search.search_mapping` as a warm-start candidate
+  whenever the new allocation keeps the thread set, so a replan can only
+  beat the incumbent, never regress to a worse mapping;
+* threads migrated are counted as threads present before AND after whose
+  slot changed — a full replan re-acquires every VM and moves everything,
+  the incremental path moves only the delta
+  (``benchmarks/bench_online.py`` quantifies both).
+
+Between events :meth:`FleetController.cosimulate` closes the loop
+empirically: the live fleet co-simulates in ONE batched
+``SweepBatch``/:func:`~repro.core.fleet.simulate_fleet` pass (reusing each
+entry's cached ``GroupIndex`` and the module-level compiled scan-kernel
+cache, so repeated controller steps pay zero recompilation) and the
+per-event :class:`ControllerRecord` logs predicted-vs-planned stability
+next to planned rates, slots moved, threads migrated, and replan latency —
+the :class:`ControllerLog` timeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .allocation import ALLOCATORS
+from .dag import Dataflow
+from .fleet import (FleetEntry, FleetPlan, FleetSimReport, ModelsArg,
+                    SlotSurfaceCache, UnsupportableDagError, _models_for,
+                    replan_incremental, simulate_fleet)
+from .mapping import (DEFAULT_VM_SIZES, InsufficientResourcesError,
+                      Mapping as ThreadMapping, VM, acquire_vms)
+from .predictor import build_group_index, predict_resources_sweep
+from .routing import RoutingPolicy
+from .scheduler import MAX_EXTRA_SLOTS, Schedule, plan, replan_on_failure
+
+
+# ---------------------------------------------------------------------------
+# Events.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DagArrive:
+    """A new dataflow asks for admission to the fleet."""
+
+    name: str
+    dag: Dataflow
+    weight: float = 1.0
+    priority: int = 0
+    max_rate: Optional[float] = None    # offered-load ceiling (t/s)
+
+
+@dataclasses.dataclass(frozen=True)
+class DagDepart:
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class VmFail:
+    vm_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class VmAdd:
+    slots: int                          # budget grows by this many slots
+
+
+@dataclasses.dataclass(frozen=True)
+class RateChange:
+    """A DAG's offered load changed; ``max_rate=None`` removes the cap."""
+
+    name: str
+    max_rate: Optional[float]
+
+
+Event = Union[DagArrive, DagDepart, VmFail, VmAdd, RateChange]
+
+
+@dataclasses.dataclass
+class EventTrace:
+    """A time-ordered ``(time, event)`` sequence (sorted stably on build,
+    so same-time events keep their authored order)."""
+
+    events: List[Tuple[float, Event]]
+
+    def __post_init__(self) -> None:
+        self.events = sorted(self.events, key=lambda te: te[0])
+
+    def __iter__(self) -> Iterator[Tuple[float, Event]]:
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+# ---------------------------------------------------------------------------
+# The controller log.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ControllerRecord:
+    """One event's outcome: what was replanned, what moved, what it cost."""
+
+    time: float
+    event: Event
+    rates: Dict[str, float]          # planned rate per live DAG, post-event
+    changed: List[str]               # DAGs rescheduled / repaired
+    threads_migrated: int            # pre-existing threads whose slot moved
+    threads_total: int               # mapped threads across the fleet
+    slots_moved: int                 # sum over DAGs of |delta est. slots|
+    batch_passes: int                # new slot surfaces computed (arrivals)
+    replan_latency_s: float          # wall time of the whole apply()
+    stable: Optional[Dict[str, bool]] = None   # co-sim verdict per DAG
+
+    @property
+    def kind(self) -> str:
+        return type(self.event).__name__
+
+
+@dataclasses.dataclass
+class ControllerLog:
+    """The controller's per-event timeline."""
+
+    records: List[ControllerRecord] = dataclasses.field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def describe(self) -> str:
+        lines = [f"ControllerLog: {len(self.records)} events"]
+        for r in self.records:
+            rates = ", ".join(f"{n}={w:g}" for n, w in r.rates.items())
+            sim = ""
+            if r.stable is not None:
+                bad = [n for n, ok in r.stable.items() if not ok]
+                sim = (" sim=OK" if not bad
+                       else f" sim=MISSES{bad}")
+            lines.append(
+                f"  [t={r.time:8.1f}] {r.kind:<10} rates[{rates}] "
+                f"moved {r.threads_migrated}/{r.threads_total} threads, "
+                f"{r.slots_moved} slots, {r.batch_passes} surface pass"
+                f"{'es' if r.batch_passes != 1 else ''}, "
+                f"{r.replan_latency_s * 1e3:.1f} ms{sim}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The controller.
+# ---------------------------------------------------------------------------
+
+class FleetController:
+    """Event-driven elastic fleet controller over cached slot surfaces.
+
+    Holds the live fleet state — per-DAG surfaces
+    (:class:`~repro.core.fleet.SlotSurfaceCache`), weights / priorities /
+    demand ceilings, the slot budget, and one
+    :class:`~repro.core.fleet.FleetEntry` (schedule + prediction +
+    ``GroupIndex``) per mapped DAG.  :meth:`apply` advances the fleet by
+    one event; :meth:`replay` drives a whole :class:`EventTrace`;
+    :attr:`plan` materializes the current state as an ordinary
+    :class:`~repro.core.fleet.FleetPlan` (so every existing fleet report /
+    simulation entry point works on the live fleet); :meth:`cosimulate`
+    runs the batched predicted-vs-planned check between events.
+
+    ``mapper=None`` runs a rates-only controller (no VM pool, no thread
+    mappings) — the pure array path used by the parity tests.
+    """
+
+    def __init__(self, models: ModelsArg, *, budget_slots: int,
+                 objective: str = "max_min", allocator: str = "mba",
+                 mapper: Optional[str] = "sam", step: float = 10.0,
+                 max_rate: float = 1e4,
+                 vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+                 policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
+                 warm_start_search: bool = True,
+                 search_opts: Optional[Dict] = None):
+        if budget_slots <= 0:
+            raise ValueError("budget_slots must be positive")
+        self.models = models
+        self.objective = objective
+        self.allocator = allocator
+        self.mapper = mapper
+        self.vm_sizes = tuple(vm_sizes)
+        self.policy = policy
+        self.budget_slots = int(budget_slots)
+        self.warm_start_search = warm_start_search
+        self.search_opts = dict(search_opts or {})
+        self.cache = SlotSurfaceCache(allocator=allocator, step=step,
+                                      max_rate=max_rate)
+        self.log = ControllerLog()
+        self.clock = 0.0
+        self._dags: Dict[str, Dataflow] = {}
+        self._weights: Dict[str, float] = {}
+        self._priorities: Dict[str, int] = {}
+        self._max_rates: Dict[str, float] = {}
+        self._entries: Dict[str, FleetEntry] = {}
+        self._next_vm_id = 0
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def dag_names(self) -> List[str]:
+        return list(self._dags)
+
+    def entry(self, name: str) -> FleetEntry:
+        return self._entries[name]
+
+    @property
+    def pool(self) -> List[VM]:
+        return [vm for e in self._entries.values() if e.schedule
+                for vm in e.schedule.vms]
+
+    @property
+    def plan(self) -> FleetPlan:
+        """The live fleet as an ordinary :class:`FleetPlan` snapshot."""
+        names = list(self._dags)
+        slots = (np.stack([self.cache.row(n) for n in names]) if names
+                 else np.zeros((0, len(self.cache.grid)), dtype=np.int64))
+        pool = self.pool
+        return FleetPlan(
+            objective=self.objective, budget_slots=self.budget_slots,
+            grid=self.cache.grid, slots_matrix=slots,
+            entries={n: self._entries[n] for n in names},
+            pool=pool,
+            overflow_slots=max(0, sum(vm.num_slots for vm in pool)
+                               - self.budget_slots),
+            policy=self.policy)
+
+    # -- event application ----------------------------------------------------
+    def apply(self, event: Event, at: Optional[float] = None
+              ) -> ControllerRecord:
+        """Advance the fleet by one event and log the outcome.
+
+        Rates are re-selected incrementally over the cached surfaces and
+        applied as a delta against the live schedules (see the module
+        docstring).  A rejected arrival (:class:`UnsupportableDagError`)
+        raises AND leaves the controller state exactly as before.
+        """
+        t0 = time.perf_counter()
+        prev_clock = self.clock
+        self.clock = self.clock if at is None else float(at)
+        passes0 = self.cache.stats["batch_passes"]
+        failed_vm: Optional[int] = None
+
+        if isinstance(event, DagArrive):
+            if event.name in self._dags:
+                raise ValueError(f"DAG {event.name!r} already in the fleet")
+            lib = _models_for(self.models, event.name)
+            # the ONE place a new slot surface is ever computed
+            self.cache.surface(event.name, event.dag, lib)
+            self._dags[event.name] = event.dag
+            self._weights[event.name] = float(event.weight)
+            self._priorities[event.name] = int(event.priority)
+            if event.max_rate is not None:
+                self._max_rates[event.name] = float(event.max_rate)
+        elif isinstance(event, DagDepart):
+            if event.name not in self._dags:
+                raise ValueError(f"unknown DAG {event.name!r}")
+            self._evict(event.name)
+        elif isinstance(event, RateChange):
+            if event.name not in self._dags:
+                raise ValueError(f"unknown DAG {event.name!r}")
+            if event.max_rate is None:
+                self._max_rates.pop(event.name, None)
+            else:
+                self._max_rates[event.name] = float(event.max_rate)
+        elif isinstance(event, VmAdd):
+            if event.slots <= 0:
+                raise ValueError("VmAdd.slots must be positive")
+            self.budget_slots += int(event.slots)
+        elif isinstance(event, VmFail):
+            # tolerate a failure notice for an already-released VM (a
+            # depart racing the notice): it is a recorded no-op
+            failed_vm = int(event.vm_id)
+        else:
+            raise TypeError(f"unknown fleet event {event!r}")
+
+        names = list(self._dags)
+        try:
+            decisions = replan_incremental(
+                self.cache, names, budget_slots=self.budget_slots,
+                objective=self.objective, weights=self._weights,
+                priorities=self._priorities, max_rates=self._max_rates)
+        except UnsupportableDagError:
+            if isinstance(event, DagArrive):
+                self._evict(event.name)   # reject: fleet state unchanged
+                self.clock = prev_clock
+            raise
+
+        changed: List[str] = []
+        migrated = 0
+        slots_moved = 0
+        new_entries: Dict[str, FleetEntry] = {}
+        for name in names:
+            dec = decisions[name]
+            old = self._entries.get(name)
+            hit_by_fail = (failed_vm is not None and old is not None
+                           and old.schedule is not None
+                           and any(vm.id == failed_vm
+                                   for vm in old.schedule.vms))
+            if old is not None and old.omega == dec.omega and not hit_by_fail:
+                new_entries[name] = old      # untouched: bit-identical
+                continue
+            lib = _models_for(self.models, name)
+            old_sched = old.schedule if old is not None else None
+            if hit_by_fail and old.omega == dec.omega:
+                sched = replan_on_failure(old_sched, lib, [failed_vm],
+                                          keep_survivors=True,
+                                          next_vm_id=self._next_vm_id)
+            else:
+                if hit_by_fail:
+                    # unreachable today (a failure changes no rate input),
+                    # but if rates ever shift in the same event the
+                    # rebuild must not land threads back on dead hardware
+                    old_sched = dataclasses.replace(
+                        old_sched, vms=[vm for vm in old_sched.vms
+                                        if vm.id != failed_vm])
+                sched = self._reschedule(name, dec.omega,
+                                         dec.estimated_slots, old_sched, lib)
+            new_entries[name] = self._build_entry(name, dec, sched, lib)
+            changed.append(name)
+            migrated += _threads_moved(old_sched, sched)
+            slots_moved += abs(dec.estimated_slots -
+                               (old.estimated_slots if old else 0))
+            if sched is not None:
+                self._next_vm_id = max(self._next_vm_id,
+                                       max(vm.id for vm in sched.vms) + 1)
+        for name, old in self._entries.items():
+            if name not in self._dags:       # departed: count the teardown
+                slots_moved += old.estimated_slots
+        self._entries = new_entries
+
+        record = ControllerRecord(
+            time=self.clock, event=event,
+            rates={n: decisions[n].omega for n in names},
+            changed=changed, threads_migrated=migrated,
+            threads_total=sum(
+                len(e.schedule.mapping.assignment)
+                for e in new_entries.values() if e.schedule),
+            slots_moved=slots_moved,
+            batch_passes=self.cache.stats["batch_passes"] - passes0,
+            replan_latency_s=time.perf_counter() - t0)
+        self.log.records.append(record)
+        return record
+
+    def replay(self, trace: EventTrace, *, simulate: bool = False,
+               **sim_kwargs) -> ControllerLog:
+        """Apply a whole trace in time order; with ``simulate`` each event
+        is followed by a :meth:`cosimulate` pass whose per-DAG stability
+        verdicts land in the record's ``stable`` field."""
+        for t, event in trace:
+            record = self.apply(event, at=t)
+            if simulate and any(e.schedule for e in self._entries.values()):
+                report = self.cosimulate(**sim_kwargs)
+                record.stable = {n: e.planned_is_stable
+                                 for n, e in report.entries.items()}
+        return self.log
+
+    def cosimulate(self, *, fractions: Optional[Sequence[float]] = None,
+                   duration: float = 8.0, dt: float = 0.1,
+                   warmup: float = 2.0, latency_sample_every: float = 0.25,
+                   engine: str = "scan") -> FleetSimReport:
+        """Predicted-vs-planned check of the live fleet: one batched
+        co-simulation over the union VM pool (the entries' cached
+        ``GroupIndex`` and the module-level compiled-kernel cache make
+        repeated controller steps recompile nothing)."""
+        return simulate_fleet(
+            self.plan, self.models, fractions=fractions, duration=duration,
+            dt=dt, warmup=warmup, latency_sample_every=latency_sample_every,
+            engine=engine, reuse_group_index=True)
+
+    # -- internals -----------------------------------------------------------
+    def _evict(self, name: str) -> None:
+        self._dags.pop(name, None)
+        self._weights.pop(name, None)
+        self._priorities.pop(name, None)
+        self._max_rates.pop(name, None)
+        self.cache.drop(name)
+
+    def _reschedule(self, name: str, omega: float, est_slots: int,
+                    old_sched: Optional[Schedule], lib) -> Optional[Schedule]:
+        """Re-plan one DAG at a new rate on (a minimal extension of) its
+        incumbent VMs; fresh VMs take fleet-unique ids from the controller's
+        counter, and VMs left empty by the new mapping are released."""
+        if omega <= 0 or self.mapper is None:
+            return None
+        base = list(old_sched.vms) if old_sched is not None else []
+        have = sum(vm.num_slots for vm in base)
+        if est_slots > have:
+            fresh = acquire_vms(est_slots - have, self.vm_sizes)
+            base = base + [VM(self._next_vm_id + i, vm.num_slots,
+                              rack=vm.rack)
+                           for i, vm in enumerate(fresh)]
+            self._next_vm_id += len(fresh)
+        search_opts = dict(self.search_opts) or None
+        alloc = None
+        if (self.mapper == "search" and self.warm_start_search
+                and old_sched is not None):
+            # allocate once up front (plan() reuses it below) to check the
+            # incumbent mapping still covers the new thread set
+            alloc = ALLOCATORS[self.allocator](self._dags[name], omega, lib)
+            same_threads = {n: ta.threads for n, ta in alloc.tasks.items()} \
+                == {n: ta.threads
+                    for n, ta in old_sched.allocation.tasks.items()}
+            on_pool = {s.vm for s in
+                       old_sched.mapping.assignment.values()} \
+                <= {vm.id for vm in base}
+            if same_threads and on_pool:
+                search_opts = dict(self.search_opts)
+                search_opts["extra_candidates"] = {
+                    "incumbent": old_sched.mapping}
+        # §8.4 growth with controller-owned ids: plan()'s own retry loop
+        # appends ids just above the DAG's subset, which could collide with
+        # another DAG's VMs — so the retries run here, on the global counter
+        vms = base
+        for _ in range(MAX_EXTRA_SLOTS + 1):
+            try:
+                return plan(self._dags[name], omega, lib,
+                            allocator=self.allocator, mapper=self.mapper,
+                            fixed_vms=vms, grow_fixed_vms=False,
+                            allocation=alloc, search_opts=search_opts)
+            except InsufficientResourcesError:
+                vms = vms + [VM(self._next_vm_id, 1)]
+                self._next_vm_id += 1
+        raise RuntimeError(
+            f"mapping {name!r} failed even with {MAX_EXTRA_SLOTS} extra "
+            "slots")
+
+    def _build_entry(self, name: str, dec, sched: Optional[Schedule],
+                     lib) -> FleetEntry:
+        gi = prediction = None
+        if sched is not None:
+            sched = _trim_empty_vms(sched)
+            gi = build_group_index(self._dags[name], sched.allocation,
+                                   sched.mapping, lib, self.policy)
+            prediction = predict_resources_sweep(
+                gi, [dec.omega], mapping=sched.mapping).at(0)
+        return FleetEntry(
+            name=name, dag=self._dags[name], weight=self._weights[name],
+            priority=self._priorities[name], omega=dec.omega,
+            grid_index=dec.grid_index, estimated_slots=dec.estimated_slots,
+            schedule=sched, prediction=prediction, group_index=gi)
+
+
+# ---------------------------------------------------------------------------
+# Delta helpers.
+# ---------------------------------------------------------------------------
+
+def _threads_moved(old: Optional[Schedule], new: Optional[Schedule]) -> int:
+    """Threads present before AND after whose slot changed — the migration
+    cost of a replan (appearing/disappearing threads are spin-up/teardown,
+    not migrations)."""
+    if old is None or new is None:
+        return 0
+    old_a = old.mapping.assignment
+    return sum(1 for t, s in new.mapping.assignment.items()
+               if t in old_a and old_a[t] != s)
+
+
+def _trim_empty_vms(sched: Schedule) -> Schedule:
+    """Release VMs the mapping left entirely empty (a shrunk DAG keeps its
+    incumbent pool for the remap, then gives back what it no longer uses).
+    The mapping is rebuilt on the kept VMs so schedule, mapping, and
+    prediction agree on the DAG's VM inventory."""
+    used = {s.vm for s in sched.mapping.assignment.values()}
+    kept = [vm for vm in sched.vms if vm.id in used]
+    if len(kept) == len(sched.vms):
+        return sched
+    mapping = ThreadMapping(kept)
+    for thread, slot in sched.mapping.assignment.items():
+        mapping.assign(thread, slot)
+    return dataclasses.replace(
+        sched, vms=kept, mapping=mapping,
+        acquired_slots=sum(vm.num_slots for vm in kept))

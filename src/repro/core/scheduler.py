@@ -16,7 +16,7 @@ import numpy as np
 from .allocation import ALLOCATORS, Allocation, UnsupportableRateError
 from .dag import Dataflow
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
-                      Mapping, VM, acquire_vms)
+                      Mapping, SlotId, VM, acquire_vms)
 from .perfmodel import ModelLibrary
 from .predictor import predict_max_rate, predict_resources
 from .routing import RoutingPolicy
@@ -83,6 +83,7 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
          vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
          fixed_vms: Optional[Sequence[VM]] = None,
          grow_fixed_vms: bool = False,
+         allocation: Optional[Allocation] = None,
          search_opts: Optional[Dict] = None) -> Schedule:
     """Plan a schedule for ``dag`` at input rate ``omega``.
 
@@ -102,8 +103,14 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
     overrides for :func:`repro.core.search.search_mapping` (grids, moves,
     seeds, policy, ...); keys the pipeline owns — pool, allocation,
     allocator, ``vm_sizes`` — are reserved and raise ``ValueError``.
+
+    ``allocation`` skips re-allocating when the caller already holds the
+    allocation for exactly (``dag``, ``omega``, ``allocator``) — e.g. the
+    online controller's warm-start path, which allocates once to compare
+    thread counts against the incumbent.
     """
-    alloc = ALLOCATORS[allocator](dag, omega, models)
+    alloc = allocation if allocation is not None \
+        else ALLOCATORS[allocator](dag, omega, models)
     rho = alloc.slots
     fixed = fixed_vms is not None
 
@@ -156,7 +163,9 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
 
 
 def replan_on_failure(schedule: Schedule, models: ModelLibrary,
-                      failed_vm_ids: Sequence[int]) -> Schedule:
+                      failed_vm_ids: Sequence[int], *,
+                      keep_survivors: bool = False,
+                      next_vm_id: Optional[int] = None) -> Schedule:
     """Fault-tolerance / straggler mitigation: rebuild the mapping without
     the failed (or persistently slow) VMs.
 
@@ -165,16 +174,47 @@ def replan_on_failure(schedule: Schedule, models: ModelLibrary,
     allocation (thread counts derive from the models, not the cluster),
     drop the failed VMs, acquire replacements per §7.1, and re-map.  No
     incremental trial-and-error convergence.
+
+    ``keep_survivors`` is the migration-minimal variant the online
+    controller uses: instead of re-running the mapper over the surviving
+    pool (which may shuffle *every* thread), each failed slot's thread
+    contents are transplanted as a unit onto a fresh replacement slot.
+    Surviving threads keep their exact slots — only threads that were on a
+    failed VM move — and the co-location structure (hence the predicted
+    rate) is preserved up to VM renaming.
+
+    ``next_vm_id`` floors the replacement (and retry) VM ids: a schedule
+    that shares a pool with other DAGs — the fleet controller — must hand
+    in its fleet-wide counter, or the per-schedule default
+    (``max(own ids) + 1``) could mint ids another DAG already owns.
     """
     failed = set(failed_vm_ids)
     survivors = [vm for vm in schedule.vms if vm.id not in failed]
     lost_slots = sum(vm.num_slots for vm in schedule.vms if vm.id in failed)
     # acquire replacement capacity (fresh ids beyond the existing ones)
     replacements = acquire_vms(max(lost_slots, 1)) if lost_slots else []
-    next_id = max((vm.id for vm in schedule.vms), default=-1) + 1
+    next_id = max(max((vm.id for vm in schedule.vms), default=-1) + 1,
+                  next_vm_id if next_vm_id is not None else 0)
     replacements = [VM(next_id + i, vm.num_slots, vm.rack)
                     for i, vm in enumerate(replacements)]
     vms = survivors + replacements
+
+    if keep_survivors:
+        rep_slots = [s for vm in replacements for s in vm.slot_ids()]
+        redirect: Dict[SlotId, SlotId] = {}
+        for thread, slot in schedule.mapping.assignment.items():
+            if slot.vm in failed and slot not in redirect:
+                # replacement capacity covers the failed VMs' total slots,
+                # so every used failed slot gets its own fresh slot
+                redirect[slot] = rep_slots[len(redirect)]
+        mapping = Mapping(vms)
+        for thread, slot in schedule.mapping.assignment.items():
+            mapping.assign(thread, redirect.get(slot, slot))
+        return Schedule(schedule.dag, schedule.omega, schedule.allocation,
+                        vms, mapping, schedule.allocator, schedule.mapper,
+                        estimated_slots=schedule.estimated_slots,
+                        acquired_slots=sum(vm.num_slots for vm in vms),
+                        search_winner=schedule.search_winner)
     last_err: Optional[Exception] = None
     for extra in range(MAX_EXTRA_SLOTS + 1):
         try:

@@ -159,6 +159,8 @@ def generate_candidates(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
                         n_moves: int = 8, seed: int = 0,
                         include: Sequence[str] = ("dsm", "rsm", "sam"),
                         base_mappings: Optional[Dict[str, ThreadMapping]]
+                        = None,
+                        extra_mappings: Optional[Dict[str, ThreadMapping]]
                         = None) -> List[Candidate]:
     """The candidate pool for one (allocation, VM pool): base mappers, RSM
     weight variants, and ``n_moves`` seeded local moves per base candidate,
@@ -166,7 +168,10 @@ def generate_candidates(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
     pool are skipped (DSM always fits, so the pool is never empty).
     ``base_mappings`` reuses prebuilt mappings for this exact (alloc, vms)
     — e.g. the pool-growth probes of :func:`search_mapping` — instead of
-    re-running those mappers."""
+    re-running those mappers.  ``extra_mappings`` (name -> mapping) are
+    caller-supplied candidates — e.g. the online controller's *incumbent*
+    mapping as a warm start — added to the pool and, like every base, used
+    to seed local moves."""
     out: List[Candidate] = []
     seen = set()
 
@@ -176,6 +181,8 @@ def generate_candidates(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
             seen.add(sig)
             out.append(Candidate(name, mapping))
 
+    for name, mapping in (extra_mappings or {}).items():
+        add(name, mapping)
     for name in include:
         if base_mappings is not None and name in base_mappings:
             add(name, base_mappings[name])
@@ -362,6 +369,8 @@ def search_mapping(dag: Dataflow, omega: float, models: ModelLibrary, *,
                    vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
                    grow_pool: bool = True, max_extra_slots: int = 8,
                    include: Sequence[str] = ("dsm", "rsm", "sam"),
+                   extra_candidates: Optional[Dict[str, ThreadMapping]]
+                   = None,
                    engine: str = "vmap") -> RankedCandidates:
     """Simulation-guided mapping for ``dag`` at rate ``omega``: build the
     candidate pool, co-evaluate every candidate's rate sweep
@@ -374,6 +383,12 @@ def search_mapping(dag: Dataflow, omega: float, models: ModelLibrary, *,
     in ``include`` packs it — all candidates then compete on the same
     hardware.  ``allocation`` skips re-allocating when the caller already
     has one.
+
+    ``extra_candidates`` (name -> mapping) warm-starts the pool with
+    caller-supplied mappings — the online controller passes the incumbent
+    schedule's mapping so a replan can only beat it, never regress — each
+    validated to map exactly this allocation's threads onto the search
+    pool's VMs, then deduped and move-seeded like any base candidate.
     """
     alloc = allocation if allocation is not None \
         else ALLOCATORS[allocator](dag, omega, models)
@@ -403,10 +418,24 @@ def search_mapping(dag: Dataflow, omega: float, models: ModelLibrary, *,
             else:
                 pool = acquire_vms(alloc.slots + extra + 1, vm_sizes)
             fits = map_bases()
+    if extra_candidates:
+        from .mapping import make_threads
+        pool_ids = {vm.id for vm in pool}
+        want = set(make_threads(alloc))
+        for name, m in extra_candidates.items():
+            if set(m.assignment) != want:
+                raise ValueError(
+                    f"extra candidate {name!r} does not map this "
+                    "allocation's thread set")
+            if any(s.vm not in pool_ids for s in m.assignment.values()):
+                raise ValueError(
+                    f"extra candidate {name!r} uses VMs outside the "
+                    "search pool")
     cands = generate_candidates(dag, alloc, pool, models,
                                 rsm_weights=rsm_weights, n_moves=n_moves,
                                 seed=seed, include=include,
-                                base_mappings=base_maps)
+                                base_mappings=base_maps,
+                                extra_mappings=extra_candidates)
     if not cands:
         raise InsufficientResourcesError(
             "<pool>", "no candidate mapping packs the search pool")

@@ -67,7 +67,7 @@ from .allocation import Allocation
 from .dag import Dataflow
 from .mapping import Mapping as ThreadMapping, SlotId
 from .perfmodel import ModelLibrary
-from .predictor import (build_group_index, effective_capacities,
+from .predictor import (GroupIndex, build_group_index, effective_capacities,
                         effective_capacity_matrix, slot_groups)
 from .routing import RoutingPolicy, group_rates
 
@@ -256,7 +256,7 @@ class DataflowSimulator:
                  mapping: ThreadMapping, models: ModelLibrary,
                  *, policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
                  cpu_penalty: bool = True, seed: int = 0,
-                 engine: str = "numpy"):
+                 engine: str = "numpy", gi: Optional[GroupIndex] = None):
         if engine not in ENGINES:
             raise ValueError(f"unknown simulator engine {engine!r}")
         self.dag = dag
@@ -268,7 +268,12 @@ class DataflowSimulator:
         self.engine = engine
         self.groups = slot_groups(mapping, alloc)
         self.rng = random.Random(seed)
-        self.gi = build_group_index(dag, alloc, mapping, models, policy)
+        # ``gi`` reuses a prebuilt index for exactly (dag, alloc, mapping,
+        # policy) — e.g. the one a FleetEntry already carries — so repeated
+        # co-simulations of a live fleet (the online controller's
+        # between-events loop) skip the flattening pass entirely
+        self.gi = gi if gi is not None \
+            else build_group_index(dag, alloc, mapping, models, policy)
         self._hops = edge_hop_latencies(self.gi)
         self._sink_rows = [self.gi.task_of[t.name] for t in dag.sinks()]
         self._batch: Optional[SweepBatch] = None

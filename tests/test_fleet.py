@@ -110,6 +110,100 @@ def test_weighted_min_ratio_matches_brute_force(lib):
         {n: e.omega for n, e in mm.entries.items()}
 
 
+def _brute_force_weighted_lex(dags, lib, budget, weights):
+    """Lexicographically best sorted ratio vector over ALL budget splits."""
+    tables = {n: _best_rate_by_budget(d, lib, budget)
+              for n, d in dags.items()}
+    names = list(dags)
+    best = None
+    for split in itertools.product(range(budget + 1), repeat=len(names)):
+        if sum(split) > budget:
+            continue
+        vec = tuple(sorted(tables[n][b] / weights[n]
+                           for n, b in zip(names, split)))
+        if best is None or vec > best:
+            best = vec
+    return best
+
+
+@pytest.mark.parametrize("weights,budget", [
+    ({"linear": 2.0, "diamond": 1.0, "star": 1.5}, 12),
+    ({"linear": 3.0, "diamond": 1.0, "star": 1.0}, 9),
+    ({"linear": 1.0, "diamond": 2.5}, 14),
+], ids=["3dags-12", "3dags-9", "2dags-14"])
+def test_weighted_unequal_exact_lexicographic(lib, weights, budget):
+    """Acceptance: with UNEQUAL weights the whole sorted ratio vector —
+    not just the minimum — equals the brute-force optimum over every
+    budget split (the exact bottleneck water-fill, ROADMAP item)."""
+    dags = {n: {"linear": linear_dag, "diamond": diamond_dag,
+                "star": star_dag}[n]() for n in weights}
+    fp = plan_fleet(dags, lib, budget_slots=budget, objective="weighted",
+                    weights=weights, mapper=None,
+                    step=STEP, max_rate=MAX_RATE)
+    got = tuple(sorted(e.omega / weights[n] for n, e in fp.entries.items()))
+    want = _brute_force_weighted_lex(dags, lib, budget, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+    assert fp.total_estimated_slots <= budget
+
+
+def test_max_rates_cap_releases_budget(lib):
+    """A demand ceiling clamps the capped DAG to the grid point at or
+    below it and hands the freed slots to the rest of the fleet."""
+    dags = {"linear": linear_dag(), "diamond": diamond_dag()}
+    free = plan_fleet(dags, lib, budget_slots=14, mapper=None,
+                      step=STEP, max_rate=MAX_RATE)
+    capped = plan_fleet(dags, lib, budget_slots=14, mapper=None,
+                        max_rates={"linear": 55.0},
+                        step=STEP, max_rate=MAX_RATE)
+    assert capped.entries["linear"].omega == 50.0
+    assert capped.entries["diamond"].omega >= free.entries["diamond"].omega
+    # a zero ceiling is a throttle, not an admission failure
+    off = plan_fleet(dags, lib, budget_slots=14, mapper=None,
+                     max_rates={"linear": 0.0},
+                     step=STEP, max_rate=MAX_RATE)
+    assert off.entries["linear"].omega == 0.0
+
+
+def test_unsupportable_dag_raises_typed_error(lib):
+    from repro.core import UnsupportableDagError
+    dags = {"linear": linear_dag(), "diamond": diamond_dag()}
+    with pytest.raises(UnsupportableDagError) as err:
+        plan_fleet(dags, lib, budget_slots=2, mapper=None,
+                   step=100.0, max_rate=MAX_RATE)
+    assert err.value.dag in dags
+    assert err.value.budget_slots == 2
+
+
+def test_surface_cache_skips_grid_passes(lib):
+    """A warm SlotSurfaceCache makes plan_fleet's grid passes free and the
+    planned rates identical to the uncached path."""
+    from repro.core import SlotSurfaceCache
+    dags = {"linear": linear_dag(), "diamond": diamond_dag()}
+    cache = SlotSurfaceCache(allocator="mba", step=STEP, max_rate=MAX_RATE)
+    s1, s2 = {}, {}
+    fp1 = plan_fleet(dags, lib, budget_slots=12, mapper=None,
+                     surface_cache=cache, stats=s1,
+                     step=STEP, max_rate=MAX_RATE)
+    fp2 = plan_fleet(dags, lib, budget_slots=12, mapper=None,
+                     surface_cache=cache, stats=s2,
+                     step=STEP, max_rate=MAX_RATE)
+    assert s1["batch_passes"] == 2 and s2["batch_passes"] == 0
+    assert {n: e.omega for n, e in fp1.entries.items()} == \
+        {n: e.omega for n, e in fp2.entries.items()}
+    with pytest.raises(ValueError):
+        plan_fleet(dags, lib, budget_slots=12, mapper=None,
+                   surface_cache=cache, allocator="lsa",
+                   step=STEP, max_rate=MAX_RATE)
+    with pytest.raises(ValueError):
+        plan_fleet(dags, lib, budget_slots=12, mapper=None,
+                   surface_cache=cache, step=STEP * 2, max_rate=MAX_RATE)
+    # a structurally different DAG under a cached name is refused, a
+    # rebuilt-but-identical DAG object is a legitimate hit
+    with pytest.raises(ValueError):
+        cache.surface("linear", star_dag(), lib)
+    cache.surface("linear", linear_dag(), lib)
+
+
 def test_priority_tiers_and_preemption_order(lib):
     """Strict tiers: the top tier gets its solo optimum, the bottom tier is
     preempted first when the budget is tight."""

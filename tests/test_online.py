@@ -1,0 +1,218 @@
+"""Online elastic fleet controller: incremental replans must equal full
+``plan_fleet`` replans (same rates, same slot estimates) while computing
+slot surfaces only for arriving DAGs; deltas must keep untouched DAGs'
+mappings bit-identical and move only the threads an event actually
+touches."""
+
+import pytest
+
+from repro.core import (DagArrive, DagDepart, EventTrace, FleetController,
+                        RateChange, UnsupportableDagError, VmAdd, VmFail,
+                        diamond_dag, linear_dag, mapping_signature,
+                        paper_library, plan_fleet, star_dag)
+
+STEP = 10.0
+MAX_RATE = 1000.0
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return paper_library()
+
+
+def mk(lib, **kw):
+    kw.setdefault("budget_slots", 16)
+    kw.setdefault("step", STEP)
+    kw.setdefault("max_rate", MAX_RATE)
+    return FleetController(lib, **kw)
+
+
+# -- incremental == full replan, across event kinds and objectives ------------
+
+@pytest.mark.parametrize("objective", ["max_min", "weighted", "priority"])
+def test_rates_match_full_plan_fleet_across_events(lib, objective):
+    """Acceptance: after EVERY event the controller's rates and slot
+    estimates equal a from-scratch ``plan_fleet`` of the same DAG set,
+    budget, weights, priorities, and demand ceilings — while ``batch_slots``
+    ran only for the three arrivals."""
+    ctl = mk(lib, objective=objective, mapper=None)
+    dags, weights, prios, caps = {}, {}, {}, {}
+    budget = 16
+
+    def check():
+        fp = plan_fleet(dags, lib, budget_slots=budget, objective=objective,
+                        weights=weights, priorities=prios, max_rates=caps,
+                        mapper=None, step=STEP, max_rate=MAX_RATE)
+        want = {n: (e.omega, e.estimated_slots)
+                for n, e in fp.entries.items()}
+        got = {n: (e.omega, e.estimated_slots)
+               for n, e in ctl._entries.items()}
+        assert got == want
+
+    def arrive(name, dag, weight=1.0, priority=0):
+        dags[name] = dag
+        weights[name] = weight
+        prios[name] = priority
+        ctl.apply(DagArrive(name, dag, weight=weight, priority=priority))
+
+    arrive("linear", linear_dag(), weight=1.0, priority=1)
+    check()
+    arrive("diamond", diamond_dag(), weight=1.5)
+    check()
+    caps["linear"] = 50.0
+    ctl.apply(RateChange("linear", 50.0))
+    check()
+    arrive("star", star_dag(), weight=2.0)
+    check()
+    budget += 6
+    ctl.apply(VmAdd(6))
+    check()
+    del caps["linear"]
+    ctl.apply(RateChange("linear", None))
+    check()
+    del dags["diamond"], weights["diamond"], prios["diamond"]
+    ctl.apply(DagDepart("diamond"))
+    check()
+    assert ctl.cache.stats["batch_passes"] == 3
+    assert all(r.batch_passes == (1 if r.kind == "DagArrive" else 0)
+               for r in ctl.log.records)
+
+
+def test_untouched_dag_keeps_schedule_bit_identical(lib):
+    """A DAG whose planned rate an event does not change keeps its exact
+    Schedule object (mapping signature included): a lower-tier arrival and
+    a same-rate demand cap are both invisible to the top tier."""
+    ctl = mk(lib, objective="priority", mapper="sam")
+    ctl.apply(DagArrive("linear", linear_dag(), priority=1))
+    top = ctl.entry("linear").schedule
+    sig = mapping_signature(top.mapping)
+    rec = ctl.apply(DagArrive("star", star_dag(), priority=0))
+    assert ctl.entry("linear").schedule is top
+    assert mapping_signature(ctl.entry("linear").schedule.mapping) == sig
+    assert rec.changed == ["star"]
+    # a demand cap at (or above) the planned rate changes nothing at all
+    rec = ctl.apply(RateChange("linear", ctl.entry("linear").omega))
+    assert rec.changed == []
+    assert rec.threads_migrated == 0
+    assert ctl.entry("linear").schedule is top
+
+
+def test_vmfail_moves_only_failed_vm_threads(lib):
+    """VmFail: rates unchanged fleet-wide, the other DAG untouched, and the
+    repaired DAG moves EXACTLY the threads that sat on the failed VM."""
+    ctl = mk(lib, mapper="sam")
+    ctl.apply(DagArrive("linear", linear_dag()))
+    ctl.apply(DagArrive("diamond", diamond_dag()))
+    rates_before = {n: ctl.entry(n).omega for n in ctl.dag_names}
+    lin = ctl.entry("linear").schedule
+    dia = ctl.entry("diamond").schedule
+    old_assign = dict(dia.mapping.assignment)
+    vmid = dia.vms[0].id
+    rec = ctl.apply(VmFail(vmid))
+    assert rec.rates == rates_before
+    assert rec.changed == ["diamond"]
+    assert ctl.entry("linear").schedule is lin
+    new = ctl.entry("diamond").schedule
+    assert set(new.mapping.assignment) == set(old_assign)
+    moved = {t for t, s in new.mapping.assignment.items()
+             if old_assign[t] != s}
+    on_failed = {t for t, s in old_assign.items() if s.vm == vmid}
+    assert moved == on_failed and moved
+    assert rec.threads_migrated == len(moved)
+    assert all(s.vm != vmid for s in new.mapping.assignment.values())
+    # co-location structure survives the transplant up to VM renaming
+    assert len(new.mapping.slot_task_counts()) == \
+        len(dia.mapping.slot_task_counts())
+    # a failure notice for a VM nobody owns is a recorded no-op
+    rec = ctl.apply(VmFail(10_000))
+    assert rec.changed == [] and rec.threads_migrated == 0
+
+
+def test_vmfail_replacements_get_fleet_unique_ids(lib):
+    """Repairing a DAG that is NOT the newest must mint replacement VM ids
+    from the controller's fleet-wide counter: the per-schedule default
+    (max of the DAG's own ids + 1) would collide with the next DAG."""
+    ctl = mk(lib, mapper="sam", budget_slots=30)
+    ctl.apply(DagArrive("linear", linear_dag(), max_rate=50.0))
+    first_ids = {vm.id for vm in ctl.entry("linear").schedule.vms}
+    ctl.apply(DagArrive("diamond", diamond_dag()))
+    ctl.apply(VmFail(max(first_ids)))
+    ids = [vm.id for vm in ctl.pool]
+    assert len(ids) == len(set(ids))
+
+
+def test_fleet_unique_vm_ids_survive_growth(lib):
+    """Rescheduling under growth (VmAdd raising rates) must keep VM ids
+    unique across the fleet — the §8.4-style retries run on the
+    controller's global counter, not per-DAG."""
+    ctl = mk(lib, mapper="sam", budget_slots=12)
+    ctl.apply(DagArrive("linear", linear_dag()))
+    ctl.apply(DagArrive("diamond", diamond_dag()))
+    ctl.apply(VmAdd(10))
+    ids = [vm.id for vm in ctl.pool]
+    assert len(ids) == len(set(ids))
+    fp = ctl.plan
+    assert fp.total_estimated_slots <= 22
+    assert fp.overflow_slots == max(
+        0, fp.total_acquired_slots - ctl.budget_slots)
+
+
+def test_admission_rejection_names_dag_and_rolls_back(lib):
+    ctl = mk(lib, budget_slots=2, step=100.0)
+    with pytest.raises(UnsupportableDagError) as err:
+        ctl.apply(DagArrive("linear", linear_dag()))
+    assert err.value.dag == "linear"
+    assert ctl.dag_names == [] and len(ctl.log) == 0
+    assert "linear" not in ctl.cache
+    with pytest.raises(ValueError):
+        ctl.apply(VmAdd(0))
+    # once the budget can hold the floor rate, the same DAG is admitted
+    ctl.apply(VmAdd(30))
+    ctl.apply(DagArrive("linear", linear_dag()))
+    assert ctl.entry("linear").omega > 0
+
+
+def test_duplicate_and_unknown_names_raise(lib):
+    ctl = mk(lib, mapper=None)
+    ctl.apply(DagArrive("linear", linear_dag()))
+    with pytest.raises(ValueError):
+        ctl.apply(DagArrive("linear", linear_dag()))
+    with pytest.raises(ValueError):
+        ctl.apply(DagDepart("nope"))
+    with pytest.raises(ValueError):
+        ctl.apply(RateChange("nope", 10.0))
+
+
+def test_replay_trace_with_cosimulation(lib):
+    """Replaying a timed trace: records arrive in time order, carry the
+    co-simulation's per-DAG stability verdicts, and the timeline renders."""
+    trace = EventTrace([
+        (5.0, DagArrive("diamond", diamond_dag())),
+        (0.0, DagArrive("linear", linear_dag())),
+        (9.0, RateChange("linear", 50.0)),
+    ])
+    assert [t for t, _ in trace] == [0.0, 5.0, 9.0]
+    ctl = mk(lib, mapper="sam")
+    log = ctl.replay(trace, simulate=True, fractions=[0.5, 1.0],
+                     duration=3.0, dt=0.1, warmup=1.0, engine="numpy")
+    assert len(log) == 3
+    for rec in log.records:
+        assert rec.stable and set(rec.stable) <= set(rec.rates)
+        assert rec.replan_latency_s > 0
+    assert "ControllerLog" in log.describe()
+    assert "RateChange" in log.describe()
+
+
+def test_plan_snapshot_works_with_fleet_reports(lib):
+    """The live fleet materializes as an ordinary FleetPlan: predictions
+    attached, preemption order defined, describe() renders."""
+    ctl = mk(lib, mapper="sam")
+    ctl.apply(DagArrive("linear", linear_dag()))
+    ctl.apply(DagArrive("star", star_dag(), priority=1))
+    fp = ctl.plan
+    assert set(fp.entries) == {"linear", "star"}
+    for e in fp.entries.values():
+        assert e.schedule is not None and e.prediction is not None
+        assert set(e.prediction.vm_cpu) == {vm.id for vm in e.schedule.vms}
+    assert fp.preemption_order()[0] == "linear"
+    assert fp.describe()

@@ -175,3 +175,45 @@ def test_local_moves_preserve_group_shape(lib, pool):
         assert sizes == base_sizes
         assert set(m.assignment) == set(base.assignment)
         assert mapping_signature(m) != mapping_signature(base)
+
+
+# -- warm-start hook (online controller's incumbent candidate) -----------------
+
+def test_extra_candidates_warm_start(lib, pool):
+    """An incumbent mapping passed via ``extra_candidates`` joins the pool
+    under its own name (extras are added first, so dedup cannot fold it
+    under a mapper's name), is evaluated and ranked, and the search result
+    is never worse than the incumbent."""
+    dag, alloc, vms, _ = pool
+    from repro.core.mapping import map_sam
+    incumbent = map_sam(dag, alloc, vms, lib)
+    ranked = search_mapping(
+        dag, 100, lib, allocation=alloc, vms=vms, grow_pool=False,
+        n_moves=0, rate_fractions=[0.8, 1.2], duration=1.0, dt=0.5,
+        extra_candidates={"incumbent": incumbent})
+    inc = ranked.result_for("incumbent")
+    assert inc is not None
+    assert ranked.best.max_stable_rate >= inc.max_stable_rate
+    assert ranked.gain_over("incumbent") is not None
+    assert ranked.gain_over("incumbent") >= 0
+
+
+def test_extra_candidates_validation(lib, pool):
+    """Extras that do not map this allocation's thread set, or sit on VMs
+    outside the search pool, are rejected up front."""
+    dag, alloc, vms, _ = pool
+    from repro.core.mapping import VM, map_dsm
+    half = ALLOCATORS["mba"](dag, 50, lib)
+    wrong_threads = map_dsm(dag, half, vms, lib)
+    with pytest.raises(ValueError):
+        search_mapping(dag, 100, lib, allocation=alloc, vms=vms,
+                       grow_pool=False, n_moves=0, rate_fractions=[1.0],
+                       duration=1.0, dt=0.5,
+                       extra_candidates={"bad": wrong_threads})
+    foreign = [VM(900 + i, vm.num_slots) for i, vm in enumerate(vms)]
+    off_pool = map_dsm(dag, alloc, foreign, lib)
+    with pytest.raises(ValueError):
+        search_mapping(dag, 100, lib, allocation=alloc, vms=vms,
+                       grow_pool=False, n_moves=0, rate_fractions=[1.0],
+                       duration=1.0, dt=0.5,
+                       extra_candidates={"bad": off_pool})
