@@ -75,6 +75,30 @@ TRACE = [
 ]
 
 
+def _replay_trace(lib, validate: bool) -> float:
+    """Replay the whole TRACE through a fresh controller and return the
+    summed apply() wall time — the validate-overhead probe (the verifier's
+    per-event cost must stay array-level, < 10% of an incremental replan)."""
+    ctl = FleetController(lib, budget_slots=BUDGET0, mapper="sam",
+                          step=STEP, max_rate=MAX_RATE, validate=validate)
+    total = 0.0
+    for kind, payload in TRACE:
+        if kind == "arrive":
+            name, maker, w, p, demand = payload
+            event = DagArrive(name, MAKERS[maker](), weight=w, priority=p,
+                              max_rate=demand)
+        elif kind == "depart":
+            event = DagDepart(payload)
+        elif kind == "rate":
+            event = RateChange(*payload)
+        elif kind == "grow":
+            event = VmAdd(payload)
+        else:
+            event = VmFail(ctl.entry(payload).schedule.vms[-1].id)
+        total += ctl.apply(event).replan_latency_s
+    return total
+
+
 def _moved(prev_scheds, new_scheds) -> int:
     moved = 0
     for name, sched in new_scheds.items():
@@ -199,7 +223,18 @@ def run() -> dict:
           f"(and <= the id-continuity diff: {no_worse})")
     print(f"slot-surface grid passes: {passes} "
           f"(== {arrivals} arrivals: {passes == arrivals})")
+    # validate-mode overhead: same trace, verifier off vs on (warm-up run
+    # first so neither side pays one-time JIT/trace costs)
+    _replay_trace(lib, validate=False)
+    base_s = min(_replay_trace(lib, validate=False) for _ in range(3))
+    check_s = min(_replay_trace(lib, validate=True) for _ in range(3))
+    overhead = check_s / base_s - 1.0
+    print(f"validate=True overhead over the 20-event trace: "
+          f"{overhead * 100:.1f}% ({check_s * 1e3:.1f} ms vs "
+          f"{base_s * 1e3:.1f} ms; target < 10%)")
     derived = {
+        "validate_overhead_pct": round(overhead * 100, 2),
+        "validate_overhead_under_10pct": overhead < 0.10,
         "median_latency_speedup": round(speedup, 1),
         "median_incremental_ms": round(med_inc * 1e3, 3),
         "median_full_ms": round(med_full * 1e3, 3),

@@ -35,6 +35,10 @@ BENCHES = [
 
 def main() -> None:
     if "--smoke" in sys.argv[1:]:
+        # CI smoke runs with the repro.analysis verifier on: every plan the
+        # smokes build is integrity-checked before it is simulated
+        from repro.core import set_default_validate
+        set_default_validate(True)
         rows = []
         for name, fn in (("sweep_smoke", bench_sweep.smoke),
                          ("mapper_search_smoke", bench_mapper_search.smoke),

@@ -1,0 +1,54 @@
+"""Plan-integrity static analysis: artifact verifier + codebase lint.
+
+Two layers share the :class:`~repro.core.diagnostics.Violation` vocabulary:
+
+* :mod:`repro.analysis.verify` — pure-inspection passes over planner
+  artifacts (``Dataflow``/``PerfModel``/``Allocation``/``Schedule``/
+  ``FleetPlan``/``EventTrace``/``FleetController``) checking ~40
+  structural invariants, cataloged in ``docs/INVARIANTS.md``;
+* :mod:`repro.analysis.lint` — a stdlib-``ast`` walk over source files
+  flagging JAX recompile hazards and race hazards.
+
+``python -m repro.analysis src/`` runs the lint; ``--verify-smoke`` runs
+the verifier over freshly built paper fixtures.  The planner hooks
+(``plan(..., validate=True)`` etc.) call into :mod:`.verify` lazily.
+"""
+
+from repro.core.diagnostics import (       # noqa: F401  (re-exports)
+    PlanIntegrityError,
+    Report,
+    Severity,
+    Violation,
+    default_validate,
+    raise_if_errors,
+    resolve_validate,
+    set_default_validate,
+)
+
+from repro.analysis.verify import (        # noqa: F401
+    verify_allocation,
+    verify_controller,
+    verify_dag,
+    verify_fleet_plan,
+    verify_grid,
+    verify_models,
+    verify_rate_decisions,
+    verify_schedule,
+    verify_trace,
+)
+
+from repro.analysis.lint import (          # noqa: F401
+    RULES,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = [
+    "Violation", "Severity", "Report", "PlanIntegrityError",
+    "raise_if_errors", "default_validate", "set_default_validate",
+    "resolve_validate",
+    "verify_dag", "verify_models", "verify_grid", "verify_allocation",
+    "verify_schedule", "verify_fleet_plan", "verify_rate_decisions",
+    "verify_trace", "verify_controller",
+    "lint_source", "lint_paths", "RULES",
+]

@@ -1,0 +1,124 @@
+"""CLI for the static-analysis layer.
+
+Usage::
+
+    python -m repro.analysis src/              # lint sources (default: src/)
+    python -m repro.analysis --list-rules      # print the lint rule catalog
+    python -m repro.analysis --verify-smoke    # verifier over paper fixtures
+    python -m repro.analysis src/ --json       # machine-readable findings
+
+Exit status is 1 when any unsuppressed lint finding or verifier ERROR
+remains, so CI can gate on it directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from repro.core.diagnostics import Severity, Violation
+from repro.analysis.lint import RULES, lint_paths
+
+
+def _print(violations: List[Violation], as_json: bool) -> None:
+    if as_json:
+        print(json.dumps([{
+            "code": v.code, "severity": v.severity.value,
+            "artifact": v.artifact, "path": v.path, "detail": v.detail,
+        } for v in violations], indent=2))
+    else:
+        for v in violations:
+            print(v)
+
+
+def verify_smoke() -> List[Violation]:
+    """Build the paper fixtures fresh and run every verifier pass on them.
+
+    Covers all seven passes: the micro/app DAG zoo, the paper model
+    tables, a deep single-DAG plan, a deep 3-DAG ``plan_fleet``, and a
+    short event trace driven through a validating ``FleetController``."""
+    from repro.core import (ALL_DAGS, DagArrive, DagDepart, FleetController,
+                            RateChange, paper_library, plan, plan_fleet)
+    from repro.core.online import EventTrace
+    from repro.analysis import verify as V
+
+    lib = paper_library()
+    out: List[Violation] = []
+    out.extend(V.verify_models(lib))
+    dags = {}
+    for name, maker in ALL_DAGS.items():
+        dag = maker()
+        dags[name] = dag
+        out.extend(V.verify_dag(dag))
+
+    sched = plan(dags["linear"], 40.0, lib, validate=False)
+    out.extend(V.verify_dag(sched.dag))
+    out.extend(V.verify_allocation(sched.allocation, sched.dag, lib))
+    out.extend(V.verify_schedule(sched))
+
+    fleet_dags = {k: dags[k] for k in ("linear", "diamond", "star")}
+    fp = plan_fleet(fleet_dags, lib, budget_slots=30, validate=False)
+    out.extend(V.verify_fleet_plan(fp, lib, deep=True))
+
+    trace = EventTrace([
+        (0.0, DagArrive("linear", dags["linear"], weight=1.0)),
+        (1.0, DagArrive("diamond", dags["diamond"], weight=1.0)),
+        (2.0, RateChange("linear", max_rate=80.0)),
+        (3.0, DagDepart("diamond")),
+    ])
+    out.extend(V.verify_trace(trace))
+    ctl = FleetController(lib, budget_slots=24, validate=False)
+    for t, ev in trace:
+        ctl.apply(ev, at=t)
+    out.extend(V.verify_controller(ctl, deep=True))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-hazard/race lint and plan-integrity verifier")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to lint (default: src/)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the lint rule catalog and exit")
+    ap.add_argument("--include-suppressed", action="store_true",
+                    help="report findings even when suppressed")
+    ap.add_argument("--verify-smoke", action="store_true",
+                    help="build paper fixtures and run all verifier passes")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            head = (rule.doc or "").strip().splitlines()
+            print(f"{rule.code}  {rule.name}: "
+                  f"{head[0] if head else ''}")
+        return 0
+
+    if args.verify_smoke:
+        violations = verify_smoke()
+        _print(violations, args.json)
+        errors = [v for v in violations if v.severity is Severity.ERROR]
+        if errors:
+            print(f"verify-smoke: {len(errors)} error(s)", file=sys.stderr)
+            return 1
+        print(f"verify-smoke: clean ({len(violations)} warning(s))"
+              if violations else "verify-smoke: clean")
+        return 0
+
+    paths = args.paths or ["src/"]
+    findings = lint_paths(paths, include_suppressed=args.include_suppressed)
+    _print(findings, args.json)
+    if findings:
+        print(f"lint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"lint: clean ({len(list(paths))} path(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

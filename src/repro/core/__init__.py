@@ -14,8 +14,14 @@ Public surface:
   scan engine (``search``)
 * online elastic fleet control — event-driven incremental replanning on
   cached slot surfaces (``online``)
+* typed plan-integrity diagnostics (``diagnostics``) backing the
+  ``repro.analysis`` verifier/lint layer and the ``validate=`` planner
+  hooks
 """
 
+from .diagnostics import (PlanIntegrityError, Report, Severity, Violation,
+                          default_validate, raise_if_errors, resolve_validate,
+                          set_default_validate)
 from .dag import (ALL_DAGS, APP_DAGS, MICRO_DAGS, Dataflow, Edge, Routing,
                   Task, diamond_dag, finance_dag, grid_dag, linear_dag,
                   star_dag, traffic_dag)

@@ -24,13 +24,25 @@ class UnsupportableRateError(RuntimeError):
     The typed counterpart of the mapper's ``InsufficientResourcesError``:
     planners treat it as "this rate does not fit" rather than crashing, and
     unlike a bare ``assert`` it survives ``python -O``.
+
+    Shares the diagnostic vocabulary of :mod:`repro.analysis`: ``code`` is
+    a stable identifier and :meth:`to_violation` renders the error as a
+    :class:`~repro.core.diagnostics.Violation` so callers can aggregate
+    planner failures and verifier findings in one report.
     """
+
+    code = "ALC_UNSUPPORTABLE_RATE"
 
     def __init__(self, task: str, rate: float, message: str = ""):
         super().__init__(
             message or f"rate {rate!r} unsupportable for task {task!r}")
         self.task = task
         self.rate = rate
+
+    def to_violation(self):
+        from .diagnostics import Severity, Violation
+        return Violation(self.code, Severity.ERROR, f"Task[{self.task}]",
+                         f"rate={self.rate!r}", str(self))
 
 
 @dataclasses.dataclass

@@ -1,0 +1,7 @@
+"""Compatibility alias: the analysis layer lives in :mod:`repro.analysis`
+(a sibling package so the core never imports it eagerly), but the issue
+tracker and older notes refer to it as ``repro.core.analysis`` — keep
+that name importable."""
+
+from repro.analysis import *          # noqa: F401,F403
+from repro.analysis import __all__    # noqa: F401

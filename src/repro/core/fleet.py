@@ -68,6 +68,7 @@ import numpy as np
 from .allocation import UnsupportableRateError
 from .batch import batch_slots, bisect_largest_true, prefix_feasible_count
 from .dag import Dataflow
+from .diagnostics import raise_if_errors, resolve_validate
 from .mapping import DEFAULT_VM_SIZES, VM, SlotId, acquire_vms
 from .perfmodel import ModelLibrary
 from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
@@ -90,6 +91,8 @@ class UnsupportableDagError(UnsupportableRateError):
     zero rate — a *contended* zero rate (priority preemption, crowded
     budget) is normal and does not raise."""
 
+    code = "FLT_UNSUPPORTABLE_DAG"
+
     def __init__(self, dag: str, floor_rate: float, budget_slots: int):
         super().__init__(
             dag, floor_rate,
@@ -97,6 +100,12 @@ class UnsupportableDagError(UnsupportableRateError):
             f"floor rate {floor_rate:g} t/s")
         self.dag = dag
         self.budget_slots = budget_slots
+
+    def to_violation(self):
+        from .diagnostics import Severity, Violation
+        return Violation(self.code, Severity.ERROR, f"Dag[{self.dag}]",
+                         f"floor_rate={self.rate:g} "
+                         f"budget_slots={self.budget_slots}", str(self))
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +353,10 @@ class SlotSurfaceCache:
         """The cached row, without computing (KeyError when absent)."""
         return self._rows[name]
 
+    def names(self) -> List[str]:
+        """Names with a cached surface, in insertion order."""
+        return list(self._rows)
+
     def drop(self, name: str) -> None:
         """Forget a departed DAG's surface."""
         self._rows.pop(name, None)
@@ -411,7 +424,8 @@ def replan_incremental(cache: SlotSurfaceCache, names: Sequence[str], *,
                        budget_slots: int, objective: str = "max_min",
                        weights: Optional[Mapping[str, float]] = None,
                        priorities: Optional[Mapping[str, int]] = None,
-                       max_rates: Optional[Mapping[str, float]] = None
+                       max_rates: Optional[Mapping[str, float]] = None,
+                       validate: Optional[bool] = None
                        ) -> Dict[str, RateDecision]:
     """Re-run ONLY the joint rate selection over cached slot surfaces.
 
@@ -436,11 +450,17 @@ def replan_incremental(cache: SlotSurfaceCache, names: Sequence[str], *,
     caps = _caps_for(cache.grid, slots, names, budget_slots, max_rates)
     idx = _select_rates(cache.grid, slots, caps, w, prio, objective,
                         budget_slots)
-    return {n: RateDecision(
+    decisions = {n: RateDecision(
         name=n, omega=float(cache.grid[idx[d]]) if idx[d] >= 0 else 0.0,
         grid_index=int(idx[d]),
         estimated_slots=int(slots[d, idx[d]]) if idx[d] >= 0 else 0)
         for d, n in enumerate(names)}
+    if resolve_validate(validate):
+        from repro.analysis.verify import verify_rate_decisions
+        raise_if_errors(
+            verify_rate_decisions(cache.grid, decisions, budget_slots),
+            "replan_incremental")
+    return decisions
 
 
 # ---------------------------------------------------------------------------
@@ -570,7 +590,8 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
                refine_search: bool = False,
                search_opts: Optional[Dict] = None,
                surface_cache: Optional[SlotSurfaceCache] = None,
-               stats: Optional[Dict[str, int]] = None) -> FleetPlan:
+               stats: Optional[Dict[str, int]] = None,
+               validate: Optional[bool] = None) -> FleetPlan:
     """Share ``budget_slots`` across ``dags`` under ``objective``.
 
     ``dags`` is a name->Dataflow mapping or a sequence of Dataflows;
@@ -708,9 +729,13 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
             priority=int(prio[d]), omega=omega, grid_index=int(idx[d]),
             estimated_slots=int(slots[d, idx[d]]) if idx[d] >= 0 else 0,
             schedule=sched, prediction=prediction, group_index=gi)
-    return FleetPlan(objective=objective, budget_slots=budget_slots,
-                     grid=grid, slots_matrix=slots, entries=entries,
-                     pool=pool, overflow_slots=overflow, policy=policy)
+    plan_obj = FleetPlan(objective=objective, budget_slots=budget_slots,
+                         grid=grid, slots_matrix=slots, entries=entries,
+                         pool=pool, overflow_slots=overflow, policy=policy)
+    if resolve_validate(validate):
+        from repro.analysis.verify import verify_fleet_plan
+        raise_if_errors(verify_fleet_plan(plan_obj, models), "plan_fleet")
+    return plan_obj
 
 
 def _refine_schedule(sched: Schedule, models: ModelLibrary,

@@ -85,6 +85,7 @@ import numpy as np
 
 from .allocation import ALLOCATORS
 from .dag import Dataflow
+from .diagnostics import raise_if_errors, resolve_validate
 from .fleet import (FleetEntry, FleetPlan, FleetSimReport, ModelsArg,
                     SlotSurfaceCache, UnsupportableDagError, _models_for,
                     replan_incremental, simulate_fleet)
@@ -233,10 +234,14 @@ class FleetController:
                  vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
                  policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
                  warm_start_search: bool = True,
-                 search_opts: Optional[Dict] = None):
+                 search_opts: Optional[Dict] = None,
+                 validate: Optional[bool] = None):
         if budget_slots <= 0:
             raise ValueError("budget_slots must be positive")
         self.models = models
+        #: tri-state: True/False force verification per apply(); None
+        #: defers to the process-wide default (see repro.core.diagnostics)
+        self.validate = validate
         self.objective = objective
         self.allocator = allocator
         self.mapper = mapper
@@ -339,7 +344,8 @@ class FleetController:
             decisions = replan_incremental(
                 self.cache, names, budget_slots=self.budget_slots,
                 objective=self.objective, weights=self._weights,
-                priorities=self._priorities, max_rates=self._max_rates)
+                priorities=self._priorities, max_rates=self._max_rates,
+                validate=False)   # apply() verifies whole-state below
         except UnsupportableDagError:
             if isinstance(event, DagArrive):
                 self._evict(event.name)   # reject: fleet state unchanged
@@ -400,6 +406,11 @@ class FleetController:
             batch_passes=self.cache.stats["batch_passes"] - passes0,
             replan_latency_s=time.perf_counter() - t0)
         self.log.records.append(record)
+        if resolve_validate(self.validate):
+            # O(changed): untouched entries skip their schedule walks
+            from repro.analysis.verify import verify_controller
+            raise_if_errors(verify_controller(self, changed=changed),
+                            f"FleetController.apply({type(event).__name__})")
         return record
 
     def replay(self, trace: EventTrace, *, simulate: bool = False,

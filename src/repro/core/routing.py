@@ -35,5 +35,8 @@ def group_rates(task: str, kind: str, task_rate: float,
     caps = {s: model.I(q) for s, q in groups.items()}
     total_cap = sum(caps.values())
     if total_cap <= 0:
-        return {s: task_rate / len(groups) for s in groups}
+        # Degenerate surface (all-zero capacities): fall back to shuffle's
+        # per-thread weighting, not uniform-per-slot, so the two policies
+        # agree and fractions stay consistent with thread placement.
+        return {s: task_rate * q / total_threads for s, q in groups.items()}
     return {s: task_rate * caps[s] / total_cap for s in groups}

@@ -15,6 +15,7 @@ import numpy as np
 
 from .allocation import ALLOCATORS, Allocation, UnsupportableRateError
 from .dag import Dataflow
+from .diagnostics import raise_if_errors, resolve_validate
 from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
                       Mapping, SlotId, VM, acquire_vms)
 from .perfmodel import ModelLibrary
@@ -84,7 +85,8 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
          fixed_vms: Optional[Sequence[VM]] = None,
          grow_fixed_vms: bool = False,
          allocation: Optional[Allocation] = None,
-         search_opts: Optional[Dict] = None) -> Schedule:
+         search_opts: Optional[Dict] = None,
+         validate: Optional[bool] = None) -> Schedule:
     """Plan a schedule for ``dag`` at input rate ``omega``.
 
     ``fixed_vms`` pins the cluster (the §8.5 five-D3-VM experiments);
@@ -108,11 +110,26 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
     allocation for exactly (``dag``, ``omega``, ``allocator``) — e.g. the
     online controller's warm-start path, which allocates once to compare
     thread counts against the incumbent.
+
+    ``validate`` runs the :mod:`repro.analysis` verifier passes (dag,
+    allocation, schedule) on the result and raises
+    :class:`~repro.core.diagnostics.PlanIntegrityError` on any broken
+    invariant; ``None`` defers to the process-wide default
+    (:func:`repro.core.diagnostics.default_validate`).
     """
     alloc = allocation if allocation is not None \
         else ALLOCATORS[allocator](dag, omega, models)
     rho = alloc.slots
     fixed = fixed_vms is not None
+
+    def _checked(sched: Schedule) -> Schedule:
+        if resolve_validate(validate):
+            from repro.analysis.verify import (verify_allocation, verify_dag,
+                                               verify_schedule)
+            raise_if_errors(verify_dag(dag)
+                            + verify_allocation(alloc, dag, models)
+                            + verify_schedule(sched), "plan")
+        return sched
 
     if mapper == "search":
         from .search import RESERVED_SEARCH_OPTS, search_mapping
@@ -126,20 +143,21 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
             vms=fixed_vms, vm_sizes=vm_sizes,
             grow_pool=(not fixed) or grow_fixed_vms, **opts)
         best = ranked.best
-        return Schedule(dag, omega, alloc, list(ranked.vms), best.mapping,
-                        allocator, "search", estimated_slots=rho,
-                        acquired_slots=sum(vm.num_slots
-                                           for vm in ranked.vms),
-                        search_winner=best.name)
+        return _checked(Schedule(
+            dag, omega, alloc, list(ranked.vms), best.mapping,
+            allocator, "search", estimated_slots=rho,
+            acquired_slots=sum(vm.num_slots for vm in ranked.vms),
+            search_winner=best.name))
 
     map_fn = MAPPERS[mapper]
 
     if fixed and not grow_fixed_vms:
         vms = list(fixed_vms)
         mapping = map_fn(dag, alloc, vms, models)
-        return Schedule(dag, omega, alloc, vms, mapping, allocator, mapper,
-                        estimated_slots=rho,
-                        acquired_slots=sum(vm.num_slots for vm in vms))
+        return _checked(Schedule(
+            dag, omega, alloc, vms, mapping, allocator, mapper,
+            estimated_slots=rho,
+            acquired_slots=sum(vm.num_slots for vm in vms)))
 
     # one §8.4 retry loop for both acquisition modes; they differ only in
     # how the next VM list grows by one slot
@@ -155,9 +173,10 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
             else:
                 vms = acquire_vms(rho + extra + 1, vm_sizes)
             continue
-        return Schedule(dag, omega, alloc, vms, mapping, allocator, mapper,
-                        estimated_slots=rho,
-                        acquired_slots=sum(vm.num_slots for vm in vms))
+        return _checked(Schedule(
+            dag, omega, alloc, vms, mapping, allocator, mapper,
+            estimated_slots=rho,
+            acquired_slots=sum(vm.num_slots for vm in vms)))
     raise RuntimeError(
         f"mapping failed even with {MAX_EXTRA_SLOTS} extra slots") from last_err
 

@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -92,23 +93,31 @@ ENGINES = ("numpy", "scan")
 #: executable cache (per shape / static args) lives on the cached callable.
 _KERNEL_CACHE: Dict[tuple, object] = {}
 _KERNEL_STATS = {"hits": 0, "misses": 0}
+#: Guards both dicts above: searches and fleet replans may request kernels
+#: from worker threads, and an unlocked check-then-insert would double-trace
+#: the same structure and tear the hit/miss counters.
+_KERNEL_LOCK = threading.Lock()
 
 
 def scan_kernel_cache_stats() -> Dict[str, int]:
     """Hit/miss counters plus compiled-executable counts for the module-level
     scan-kernel cache (``compiled`` sums each cached callable's jit cache, so
     a delta of zero between two runs proves zero recompilation)."""
+    with _KERNEL_LOCK:
+        entries = list(_KERNEL_CACHE.values())
+        stats = dict(_KERNEL_STATS)
     compiled = 0
-    for fn in _KERNEL_CACHE.values():
+    for fn in entries:
         size = getattr(fn, "_cache_size", None)
         compiled += int(size()) if callable(size) else 0
-    return {"entries": len(_KERNEL_CACHE), "hits": _KERNEL_STATS["hits"],
-            "misses": _KERNEL_STATS["misses"], "compiled": compiled}
+    return {"entries": len(entries), "hits": stats["hits"],
+            "misses": stats["misses"], "compiled": compiled}
 
 
 def scan_kernel_cache_clear() -> None:
-    _KERNEL_CACHE.clear()
-    _KERNEL_STATS["hits"] = _KERNEL_STATS["misses"] = 0
+    with _KERNEL_LOCK:
+        _KERNEL_CACHE.clear()
+        _KERNEL_STATS["hits"] = _KERNEL_STATS["misses"] = 0
 
 
 def _kernel_key(row_slices, in_edges, sink_groups, n_slots: int,
@@ -125,14 +134,15 @@ def get_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
     cache.  ``batched=True`` returns the ``jax.vmap``-over-candidates variant
     (leading candidate axis on caps / fractions / slot ids / hops)."""
     key = _kernel_key(row_slices, in_edges, sink_groups, n_slots, batched)
-    fn = _KERNEL_CACHE.get(key)
-    if fn is None:
-        _KERNEL_STATS["misses"] += 1
-        fn = _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots,
-                               batched=batched)
-        _KERNEL_CACHE[key] = fn
-    else:
-        _KERNEL_STATS["hits"] += 1
+    with _KERNEL_LOCK:
+        fn = _KERNEL_CACHE.get(key)
+        if fn is None:
+            _KERNEL_STATS["misses"] += 1
+            fn = _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots,
+                                   batched=batched)
+            _KERNEL_CACHE[key] = fn
+        else:
+            _KERNEL_STATS["hits"] += 1
     return fn
 
 
@@ -665,7 +675,7 @@ def _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
             contrib = jnp.where(cap_pos, frac * (queues + 1.0) / safe_caps,
                                 0.0)
             per_task = jnp.zeros((T, K), caps.dtype) \
-                .at[jnp.asarray(g_task_c)].add(contrib)
+                .at[jnp.asarray(g_task_c)].add(contrib)  # lint: ok JAX104 - structural constant, part of the kernel cache key
             best: List = [None] * T
             for row in range(T):
                 if not in_edges[row]:

@@ -52,7 +52,7 @@ def env_lean_optimizer(env) -> bool:
 
 
 def set_lean_optimizer(on: bool) -> None:
-    _LEAN_OPT["enabled"] = on
+    _LEAN_OPT["enabled"] = on  # lint: ok RACE201 - CLI flag, set once at startup before any worker runs
 
 
 def _struct_tree(tree):

@@ -66,7 +66,7 @@ class StreamExecutor:
             fn = OPERATORS[kind]
             for slot in g:
                 dev = self.slot_device[slot]
-                self._ops[(task, slot)] = jax.jit(fn, device=dev)
+                self._ops[(task, slot)] = jax.jit(fn, device=dev)  # lint: ok JAX101 - one-time __init__ cache, each (task, slot) jitted once
         self._frame_count = defaultdict(int)
 
     # -- routing ---------------------------------------------------------------

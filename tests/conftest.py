@@ -9,7 +9,19 @@ run them with ``pytest -m slow`` (or everything with ``-m ""``)."""
 import jax
 import pytest
 
-from repro.core import paper_library
+from repro.core import paper_library, set_default_validate
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _validate_all_plans():
+    """Turn the repro.analysis verifier on for every planner call in the
+    suite: any test that builds an internally inconsistent Schedule /
+    FleetPlan / controller state fails loudly instead of silently passing
+    (and the verifier itself is proven false-positive-free on every
+    artifact the suite constructs)."""
+    prev = set_default_validate(True)
+    yield
+    set_default_validate(prev)
 
 
 def pytest_configure(config):

@@ -1,0 +1,656 @@
+"""Mutation suite for the plan-integrity verifier + lint layer.
+
+One test per verifier invariant: build a valid artifact, seed exactly one
+corruption, and assert exactly that ``Violation.code`` fires.  The clean
+fixtures double as the zero-false-positive check (module-scoped, verified
+pristine in ``test_clean_artifacts_verify_clean``), and the whole repo's
+``src/`` tree must lint clean (findings fixed or suppressed with a
+reason)."""
+
+import copy
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.analysis import (PlanIntegrityError, Severity, lint_paths,
+                            lint_source, verify_allocation, verify_controller,
+                            verify_dag, verify_fleet_plan, verify_grid,
+                            verify_models, verify_rate_decisions,
+                            verify_schedule, verify_trace)
+from repro.core import (ALLOCATORS, DagArrive, DagDepart, Dataflow, Edge,
+                        FleetController, ModelLibrary, PerfModel, RateChange,
+                        RoutingPolicy, SlotId, UnsupportableDagError,
+                        UnsupportableRateError, VM, VmAdd, build_group_index,
+                        diamond_dag, linear_dag, plan, plan_fleet,
+                        replan_incremental, star_dag)
+from repro.core.fleet import SlotSurfaceCache
+from repro.core.online import EventTrace
+from repro.core.perfmodel import ModelPoint
+from repro.core.routing import group_rates
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+STEP, MAX_RATE, BUDGET = 10.0, 300.0, 30
+
+
+def codes(violations):
+    return sorted({v.code for v in violations})
+
+
+# -- corruption helpers (single-code precision) ------------------------------
+
+def _move(mapping, thread, slot):
+    """Move ``thread`` to ``slot`` keeping the mapping's three internal
+    views (assignment, _slot_threads, _slot_counts) consistent, so only
+    the *semantic* corruption under test fires — not SLOT_INDEX_DESYNC."""
+    old = mapping.assignment[thread]
+    mapping.assignment[thread] = slot
+    mapping._slot_threads[old].remove(thread)
+    mapping._slot_threads.setdefault(slot, []).append(thread)
+    c = mapping._slot_counts[old]
+    c[thread.task] -= 1
+    if not c[thread.task]:
+        del c[thread.task]
+    counts = mapping._slot_counts.setdefault(slot, {})
+    counts[thread.task] = counts.get(thread.task, 0) + 1
+
+
+def _rename_vm(entry_or_sched, old_id, new_id):
+    """Rename a VM id consistently through a schedule (and, for a fleet
+    entry, its cached GroupIndex) so only cross-artifact codes fire."""
+    sched = getattr(entry_or_sched, "schedule", entry_or_sched)
+
+    def fix(s):
+        return SlotId(new_id, s.slot) if s.vm == old_id else s
+
+    for vm in sched.vms:
+        if vm.id == old_id:
+            vm.id = new_id
+    m = sched.mapping
+    m.assignment = {t: fix(s) for t, s in m.assignment.items()}
+    m.slot_cpu = {fix(s): v for s, v in m.slot_cpu.items()}
+    m.slot_mem = {fix(s): v for s, v in m.slot_mem.items()}
+    m._slot_threads = {fix(s): v for s, v in m._slot_threads.items()}
+    m._slot_counts = {fix(s): v for s, v in m._slot_counts.items()}
+    gi = getattr(entry_or_sched, "group_index", None)
+    if gi is not None:
+        gi.slots = [fix(s) for s in gi.slots]
+
+
+# -- fixtures ----------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sched(lib):
+    return plan(linear_dag(), 40.0, lib)
+
+
+@pytest.fixture(scope="module")
+def fleet(lib):
+    dags = {"linear": linear_dag(), "diamond": diamond_dag(),
+            "star": star_dag()}
+    return plan_fleet(dags, lib, budget_slots=BUDGET, step=STEP,
+                      max_rate=MAX_RATE)
+
+
+@pytest.fixture(scope="module")
+def ctl(lib):
+    c = FleetController(lib, budget_slots=24, step=STEP, max_rate=MAX_RATE)
+    c.apply(DagArrive("linear", linear_dag()), at=0.0)
+    c.apply(DagArrive("diamond", diamond_dag()), at=1.0)
+    c.apply(RateChange("linear", max_rate=80.0), at=2.0)
+    return c
+
+
+def test_clean_artifacts_verify_clean(lib, sched, fleet, ctl):
+    """Zero false positives on every pristine artifact."""
+    assert verify_dag(sched.dag) == []
+    assert [v for v in verify_models(lib)
+            if v.severity is Severity.ERROR] == []
+    assert verify_allocation(sched.allocation, sched.dag, lib) == []
+    assert verify_schedule(sched) == []
+    assert verify_fleet_plan(fleet, lib, deep=True) == []
+    assert verify_controller(ctl, deep=True) == []
+
+
+# -- DAG ---------------------------------------------------------------------
+
+def test_dag_no_tasks():
+    assert codes(verify_dag(Dataflow("empty"))) == ["DAG_NO_TASKS"]
+
+
+def test_dag_edge_unknown_task():
+    d = linear_dag()
+    d.edges.append(Edge("x", "ghost"))
+    assert codes(verify_dag(d)) == ["DAG_EDGE_UNKNOWN_TASK"]
+
+
+def test_dag_bad_selectivity():
+    d = linear_dag()
+    d.edges[0] = dataclasses.replace(d.edges[0], selectivity=-1.0)
+    assert codes(verify_dag(d)) == ["DAG_BAD_SELECTIVITY"]
+
+
+def test_dag_cycle():
+    d = Dataflow("loop")
+    d.add_task("a", "pi")
+    d.add_task("b", "pi")
+    d.add_edge("a", "b")
+    d.add_edge("b", "a")
+    assert codes(verify_dag(d)) == ["DAG_CYCLE"]
+
+
+def test_dag_endpoint_flag():
+    d = linear_dag()
+    mid = next(t for t in d.tasks.values()
+               if not t.is_source and not t.is_sink
+               and any(e.dst == t.name for e in d.edges))
+    d.tasks[mid.name] = dataclasses.replace(mid, is_source=True)
+    assert codes(verify_dag(d)) == ["DAG_ENDPOINT_FLAG"]
+
+
+def test_dag_routing_missing():
+    d = linear_dag()
+    del d.routing["p"]
+    assert codes(verify_dag(d)) == ["DAG_ROUTING_MISSING"]
+
+
+# -- models ------------------------------------------------------------------
+
+def _copy_lib(lib):
+    return copy.deepcopy(lib)
+
+
+def test_mod_tau_order(lib):
+    lib2 = _copy_lib(lib)
+    m = lib2["parse_xml"]
+    m._xp[2] = m._xp[1]            # no longer strictly increasing
+    assert codes(verify_models(lib2, kinds=["parse_xml"])) == \
+        ["MOD_TAU_ORDER"]
+
+
+def test_mod_negative(lib):
+    lib2 = _copy_lib(lib)
+    lib2["parse_xml"]._fp["cpu"][1] = -0.5
+    assert codes(verify_models(lib2, kinds=["parse_xml"])) == ["MOD_NEGATIVE"]
+
+
+def test_mod_res_over_slot_warns(lib):
+    lib2 = _copy_lib(lib)
+    m = lib2["parse_xml"]
+    m.points[0] = dataclasses.replace(m.points[0], cpu=1.5)
+    out = verify_models(lib2, kinds=["parse_xml"])
+    assert codes(out) == ["MOD_RES_OVER_SLOT"]
+    assert all(v.severity is Severity.WARNING for v in out)
+
+
+def test_mod_zero_peak(lib):
+    lib2 = _copy_lib(lib)
+    m = lib2["parse_xml"]
+    m.points[:] = [dataclasses.replace(p, rate=0.0) for p in m.points]
+    assert codes(verify_models(lib2, kinds=["parse_xml"])) == ["MOD_ZERO_PEAK"]
+
+
+def test_mod_grid_coverage():
+    assert codes(verify_grid(np.array([50.0, 30.0]))) == ["MOD_GRID_COVERAGE"]
+    assert verify_grid(np.array([10.0, 20.0])) == []
+
+
+# -- allocation --------------------------------------------------------------
+
+@pytest.fixture()
+def alloc(sched):
+    return copy.deepcopy(sched.allocation)
+
+
+def test_alc_task_mismatch(alloc, sched, lib):
+    del alloc.tasks["p"]
+    assert codes(verify_allocation(alloc, sched.dag, lib)) == \
+        ["ALC_TASK_MISMATCH"]
+
+
+def test_alc_kind_mismatch(alloc, sched, lib):
+    alloc.tasks["p"].kind = "azure_blob"
+    assert codes(verify_allocation(alloc, sched.dag, lib)) == \
+        ["ALC_KIND_MISMATCH"]
+
+
+def test_alc_bad_threads(alloc, sched, lib):
+    ta = alloc.tasks["p"]
+    ta.threads = 0
+    ta.full_bundles = 0            # isolate: bundle bookkeeping is its own code
+    assert codes(verify_allocation(alloc, sched.dag, lib)) == \
+        ["ALC_BAD_THREADS"]
+
+
+def test_alc_bad_resources(alloc, sched, lib):
+    alloc.tasks["p"].cpu = float("nan")
+    assert codes(verify_allocation(alloc, sched.dag, lib)) == \
+        ["ALC_BAD_RESOURCES"]
+
+
+def test_alc_rate_mismatch(alloc, sched, lib):
+    alloc.tasks["p"].rate *= 2.0
+    assert codes(verify_allocation(alloc, sched.dag, lib)) == \
+        ["ALC_RATE_MISMATCH"]
+
+
+def test_alc_bundle_bookkeeping(alloc, sched, lib):
+    ta = alloc.tasks["p"]
+    ta.bundle_size = 1
+    ta.full_bundles = ta.threads + 1
+    assert codes(verify_allocation(alloc, sched.dag, lib)) == \
+        ["ALC_BUNDLE_BOOKKEEPING"]
+
+
+# -- schedule ----------------------------------------------------------------
+
+@pytest.fixture()
+def s(sched):
+    return copy.deepcopy(sched)
+
+
+def test_sch_bad_omega(s):
+    s.omega = -5.0
+    assert codes(verify_schedule(s)) == ["SCH_BAD_OMEGA"]
+
+
+def test_sch_alloc_omega_mismatch(s):
+    s.omega *= 2.0
+    assert codes(verify_schedule(s)) == ["SCH_ALLOC_OMEGA_MISMATCH"]
+
+
+def test_sch_vm_dup(s):
+    vm = s.vms[0]
+    s.vms.append(VM(vm.id, vm.num_slots, rack=vm.rack))
+    s.acquired_slots += vm.num_slots
+    assert codes(verify_schedule(s)) == ["SCH_VM_DUP"]
+
+
+def test_sch_acquired_mismatch(s):
+    s.acquired_slots += 1
+    assert codes(verify_schedule(s)) == ["SCH_ACQUIRED_MISMATCH"]
+
+
+def test_sch_estimate_mismatch(s):
+    s.estimated_slots += 1
+    assert codes(verify_schedule(s)) == ["SCH_ESTIMATE_MISMATCH"]
+
+
+def test_sch_thread_unplaced(s):
+    s.allocation.tasks["p"].threads += 1
+    assert codes(verify_schedule(s)) == ["SCH_THREAD_UNPLACED"]
+
+
+def test_sch_thread_unknown(s):
+    s.allocation.tasks["p"].threads -= 1
+    assert codes(verify_schedule(s)) == ["SCH_THREAD_UNKNOWN"]
+
+
+def test_sch_slot_unknown_vm(s):
+    t = next(iter(s.mapping.assignment))
+    _move(s.mapping, t, SlotId(999, 0))
+    assert codes(verify_schedule(s)) == ["SCH_SLOT_UNKNOWN_VM"]
+
+
+def test_sch_slot_out_of_range(s):
+    t = next(iter(s.mapping.assignment))
+    vm = s.vms[0]
+    _move(s.mapping, t, SlotId(vm.id, vm.num_slots + 3))
+    assert codes(verify_schedule(s)) == ["SCH_SLOT_OUT_OF_RANGE"]
+
+
+def test_sch_slot_index_desync(s):
+    t, slot = next(iter(s.mapping.assignment.items()))
+    other = next(sl for sl in s.mapping.slots() if sl != slot)
+    s.mapping.assignment[t] = other      # deliberately skip the index fixup
+    assert codes(verify_schedule(s)) == ["SCH_SLOT_INDEX_DESYNC"]
+
+
+def test_sch_gi_mismatch(s, lib):
+    gi = build_group_index(s.dag, s.allocation, s.mapping, lib,
+                           RoutingPolicy.SHUFFLE)
+    t, slot = next(iter(s.mapping.assignment.items()))
+    other = next(sl for sl in s.mapping.slots() if sl != slot)
+    _move(s.mapping, t, other)           # mapping moves on; gi is stale
+    assert codes(verify_schedule(s, gi=gi)) == ["SCH_GI_MISMATCH"]
+
+
+def test_sch_gi_frac(s, lib):
+    gi = build_group_index(s.dag, s.allocation, s.mapping, lib,
+                           RoutingPolicy.SHUFFLE)
+    gi.g_frac[0] += 0.5
+    assert codes(verify_schedule(s, gi=gi)) == ["SCH_GI_FRAC"]
+
+
+# -- fleet plan --------------------------------------------------------------
+
+@pytest.fixture()
+def fp(fleet):
+    return copy.deepcopy(fleet)
+
+
+def _mapped(fp):
+    return next(n for n, e in fp.entries.items() if e.schedule is not None)
+
+
+def test_flt_grid_mismatch(fp):
+    fp.entries[_mapped(fp)].omega += 1.0
+    assert codes(verify_fleet_plan(fp)) == ["FLT_GRID_MISMATCH"]
+
+
+def test_flt_slots_matrix_mismatch(fp):
+    e = fp.entries[_mapped(fp)]
+    fp.budget_slots += 10                # keep within budget: isolate the code
+    e.estimated_slots += 1
+    assert codes(verify_fleet_plan(fp)) == ["FLT_SLOTS_MATRIX_MISMATCH"]
+
+
+def test_flt_zero_rate_mapped(fp):
+    e = fp.entries[_mapped(fp)]
+    e.omega, e.grid_index, e.estimated_slots = 0.0, -1, 0
+    assert codes(verify_fleet_plan(fp)) == ["FLT_ZERO_RATE_MAPPED"]
+
+
+def test_flt_vm_dup(fp):
+    names = [n for n, e in fp.entries.items() if e.schedule is not None]
+    assert len(names) >= 2
+    a, b = fp.entries[names[0]], fp.entries[names[1]]
+    _rename_vm(b, b.schedule.vms[0].id, a.schedule.vms[0].id)
+    assert codes(verify_fleet_plan(fp)) == ["FLT_VM_DUP"]
+
+
+def test_flt_surface_nonmonotone(fp):
+    name = _mapped(fp)
+    d = list(fp.entries).index(name)
+    e = fp.entries[name]
+    assert e.grid_index > 0
+    fp.slots_matrix[d, 0] = fp.slots_matrix[d, 1] + 3
+    assert codes(verify_fleet_plan(fp)) == ["FLT_SURFACE_NONMONOTONE"]
+
+
+def test_flt_surface_stale(fp, lib):
+    name = _mapped(fp)
+    d = list(fp.entries).index(name)
+    row = np.asarray(fp.slots_matrix[d])
+    finite = row < 2 ** 61
+    prefix = int(np.argmin(finite)) if not finite.all() else len(row)
+    assert fp.entries[name].grid_index < prefix - 1
+    fp.slots_matrix[d, prefix - 1] += 1   # monotone-preserving, last cell
+    assert codes(verify_fleet_plan(fp, lib, deep=True)) == \
+        ["FLT_SURFACE_STALE"]
+
+
+def test_flt_budget_exceeded(fp):
+    fp.budget_slots = fp.total_estimated_slots - 1
+    assert codes(verify_fleet_plan(fp)) == ["FLT_BUDGET_EXCEEDED"]
+
+
+def test_flt_pool_mismatch(fp):
+    fp.pool.pop()
+    assert codes(verify_fleet_plan(fp)) == ["FLT_POOL_MISMATCH"]
+
+
+def test_flt_schedules_for_skips_unchanged_walks(fp):
+    """The apply()-hook fast path: a schedule-level corruption in an entry
+    OUTSIDE ``schedules_for`` goes unreported (that entry was verified by
+    the event that touched it), while fleet-wide checks still run."""
+    names = [n for n, e in fp.entries.items() if e.schedule is not None]
+    corrupt, other = names[0], names[1]
+    fp.entries[corrupt].schedule.acquired_slots += 1
+    assert codes(verify_fleet_plan(fp, schedules_for=[other])) == []
+    assert codes(verify_fleet_plan(fp, schedules_for=[corrupt])) == \
+        ["SCH_ACQUIRED_MISMATCH"]
+
+
+# -- rate decisions (the replan_incremental hook) ----------------------------
+
+@pytest.fixture()
+def decisions(lib):
+    cache = SlotSurfaceCache(step=STEP, max_rate=MAX_RATE)
+    cache.surface("linear", linear_dag(), lib)
+    return cache, replan_incremental(cache, ["linear"], budget_slots=12)
+
+
+def test_rate_decision_grid_mismatch(decisions):
+    cache, dec = decisions
+    dec = {"linear": dataclasses.replace(dec["linear"],
+                                         omega=dec["linear"].omega + 1.0)}
+    assert codes(verify_rate_decisions(cache.grid, dec, 12)) == \
+        ["FLT_GRID_MISMATCH"]
+
+
+def test_rate_decision_budget_exceeded(decisions):
+    cache, dec = decisions
+    tight = dec["linear"].estimated_slots - 1
+    assert codes(verify_rate_decisions(cache.grid, dec, tight)) == \
+        ["FLT_BUDGET_EXCEEDED"]
+
+
+# -- event traces ------------------------------------------------------------
+
+def test_trc_bad_time():
+    assert codes(verify_trace([(-1.0, VmAdd(2))])) == ["TRC_BAD_TIME"]
+
+
+def test_trc_unordered():
+    # a raw (unsorted) list: EventTrace itself sorts on construction
+    raw = [(1.0, VmAdd(1)), (0.5, VmAdd(1))]
+    assert codes(verify_trace(raw)) == ["TRC_UNORDERED"]
+    assert verify_trace(EventTrace(raw)) == []
+
+
+def test_trc_dup_arrive():
+    d = linear_dag()
+    raw = [(0.0, DagArrive("x", d)), (1.0, DagArrive("x", d))]
+    assert codes(verify_trace(raw)) == ["TRC_DUP_ARRIVE"]
+
+
+def test_trc_unknown_dag():
+    assert codes(verify_trace([(0.0, DagDepart("ghost"))])) == \
+        ["TRC_UNKNOWN_DAG"]
+    assert verify_trace([(0.0, DagDepart("ghost"))], live=["ghost"]) == []
+
+
+def test_trc_bad_event():
+    raw = [(0.0, DagArrive("x", linear_dag(), weight=0.0)),
+           (1.0, VmAdd(0))]
+    out = verify_trace(raw)
+    assert codes(out) == ["TRC_BAD_EVENT"]
+    assert len(out) == 2
+
+
+# -- controller --------------------------------------------------------------
+
+@pytest.fixture()
+def c(ctl):
+    return copy.deepcopy(ctl)
+
+
+def test_ctl_entry_dag_mismatch(c):
+    del c._entries["linear"]
+    assert codes(verify_controller(c)) == ["CTL_ENTRY_DAG_MISMATCH"]
+
+
+def test_ctl_cache_mismatch(c):
+    c.cache.drop("linear")
+    assert codes(verify_controller(c)) == ["CTL_CACHE_MISMATCH"]
+
+
+def test_ctl_meta_orphan(c):
+    c._weights["ghost"] = 2.0
+    assert codes(verify_controller(c)) == ["CTL_META_ORPHAN"]
+
+
+def test_ctl_vm_counter_behind(c):
+    c._next_vm_id = 0
+    assert codes(verify_controller(c)) == ["CTL_VM_COUNTER_BEHIND"]
+
+
+def test_ctl_log_threads(c):
+    c.log.records[-1].threads_total += 3
+    assert codes(verify_controller(c)) == ["CTL_LOG_THREADS"]
+
+
+# -- validate= hooks ---------------------------------------------------------
+
+def test_plan_validate_raises_on_mismatched_allocation(lib):
+    dag = linear_dag()
+    stale = ALLOCATORS["mba"](dag, 80.0, lib)   # allocation for ANOTHER rate
+    with pytest.raises(PlanIntegrityError) as exc:
+        plan(dag, 40.0, lib, allocation=stale, validate=True)
+    assert "SCH_ALLOC_OMEGA_MISMATCH" in {v.code for v in exc.value.violations}
+
+
+def test_controller_apply_validate_raises(c):
+    c.validate = True
+    c._weights["ghost"] = 2.0
+    with pytest.raises(PlanIntegrityError) as exc:
+        c.apply(VmAdd(1), at=3.0)
+    assert {v.code for v in exc.value.violations} == {"CTL_META_ORPHAN"}
+
+
+def test_plan_fleet_validate_clean(lib):
+    plan_fleet({"linear": linear_dag()}, lib, budget_slots=12, step=STEP,
+               max_rate=MAX_RATE, validate=True)
+
+
+def test_replan_incremental_validate_clean(decisions, lib):
+    cache, _ = decisions
+    replan_incremental(cache, ["linear"], budget_slots=12, validate=True)
+
+
+# -- planner errors share the Violation vocabulary ---------------------------
+
+def test_unsupportable_rate_error_violation():
+    err = UnsupportableRateError("parse", 123.0)
+    v = err.to_violation()
+    assert (v.code, err.code) == ("ALC_UNSUPPORTABLE_RATE",
+                                  "ALC_UNSUPPORTABLE_RATE")
+    assert v.severity is Severity.ERROR and "parse" in v.artifact
+
+
+def test_unsupportable_dag_error_violation(lib):
+    with pytest.raises(UnsupportableDagError) as exc:
+        plan_fleet({"linear": linear_dag()}, lib, budget_slots=2,
+                   step=200.0, max_rate=400.0)
+    v = exc.value.to_violation()
+    assert v.code == exc.value.code == "FLT_UNSUPPORTABLE_DAG"
+    assert "budget_slots=2" in v.path
+    assert isinstance(exc.value, UnsupportableRateError)
+
+
+# -- routing fallback pin (satellite) ----------------------------------------
+
+def test_zero_capacity_routing_weights_by_threads():
+    """When every group's modeled capacity is 0, SLOT_AWARE must degrade to
+    SHUFFLE's per-thread weighting — not uniform-per-slot."""
+    lib = ModelLibrary()
+    lib.add(PerfModel("zcap", [ModelPoint(1, 0.0, 0.1, 0.1),
+                               ModelPoint(2, 0.0, 0.2, 0.2)]))
+    groups = {SlotId(0, 0): 1, SlotId(0, 1): 3}
+    shuffle = group_rates("t", "zcap", 8.0, groups, lib,
+                          RoutingPolicy.SHUFFLE)
+    aware = group_rates("t", "zcap", 8.0, groups, lib,
+                        RoutingPolicy.SLOT_AWARE)
+    assert shuffle == aware
+    assert shuffle[SlotId(0, 0)] == pytest.approx(2.0)
+    assert shuffle[SlotId(0, 1)] == pytest.approx(6.0)
+
+
+# -- lint --------------------------------------------------------------------
+
+def test_lint_clean_on_repo_src():
+    assert lint_paths([str(SRC)]) == []
+
+
+def test_lint_jax101_jit_in_loop():
+    bad = ("import jax\n"
+           "def f(h, xs):\n"
+           "    for x in xs:\n"
+           "        y = jax.jit(h)\n")
+    assert codes(lint_source(bad)) == ["JAX101"]
+    good = ("import jax\n"
+            "def f(h, xs):\n"
+            "    g = jax.jit(h)\n"
+            "    for x in xs:\n"
+            "        y = g(x)\n")
+    assert lint_source(good) == []
+
+
+def test_lint_jax101_nested_def_in_loop_ok():
+    src = ("import jax\n"
+           "def f(hs):\n"
+           "    outs = []\n"
+           "    for h in hs:\n"
+           "        def make(h=h):\n"
+           "            return jax.jit(h)\n"
+           "        outs.append(make)\n")
+    assert lint_source(src) == []
+
+
+def test_lint_jax102_inline_jit_call():
+    assert codes(lint_source("import jax\ny = jax.jit(f)(x)\n")) == ["JAX102"]
+    assert lint_source("import jax\ng = jax.jit(f)\ny = g(x)\n") == []
+    # inline vmap is fine (no compile cache of its own)
+    assert lint_source("import jax\ny = jax.vmap(f)(x)\n") == []
+
+
+def test_lint_jax103_traced_branch():
+    bad = "import jax.numpy as jnp\nif jnp.any(x > 0):\n    y = 1\n"
+    assert codes(lint_source(bad)) == ["JAX103"]
+    assert lint_source("if n > 0:\n    y = 1\n") == []
+
+
+def test_lint_jax104_baked_closure():
+    bad = ("import jax\nimport numpy as np\n"
+           "def make(p):\n"
+           "    frac = np.asarray(p)\n"
+           "    def kernel(x):\n"
+           "        return x * frac\n"
+           "    return jax.jit(kernel)\n")
+    assert codes(lint_source(bad)) == ["JAX104"]
+    good = ("import jax\nimport numpy as np\n"
+            "def make(p):\n"
+            "    frac = np.asarray(p)\n"
+            "    def kernel(x, frac):\n"
+            "        return x * frac\n"
+            "    return jax.jit(kernel)\n")
+    assert lint_source(good) == []
+
+
+def test_lint_race201_unlocked_module_cache():
+    bad = ("_CACHE = {}\n"
+           "def get(key, build):\n"
+           "    if key not in _CACHE:\n"
+           "        _CACHE[key] = build(key)\n"
+           "    return _CACHE[key]\n")
+    assert codes(lint_source(bad)) == ["RACE201"]
+    good = ("import threading\n"
+            "_CACHE = {}\n"
+            "_LOCK = threading.Lock()\n"
+            "def get(key, build):\n"
+            "    with _LOCK:\n"
+            "        if key not in _CACHE:\n"
+            "            _CACHE[key] = build(key)\n"
+            "        return _CACHE[key]\n")
+    assert lint_source(good) == []
+
+
+def test_lint_race202_mutable_default():
+    assert codes(lint_source("def f(x, acc=[]):\n    acc.append(x)\n")) == \
+        ["RACE202"]
+    assert lint_source("def f(x, acc=None):\n    acc = acc or []\n") == []
+
+
+def test_lint_suppression_comment():
+    bad = "import jax\ny = jax.jit(f)(x)  # lint: ok JAX102 - one-shot tool\n"
+    assert lint_source(bad) == []
+    assert codes(lint_source(bad, include_suppressed=True)) == ["JAX102"]
+    wrong_code = "import jax\ny = jax.jit(f)(x)  # lint: ok JAX101 - nope\n"
+    assert codes(lint_source(wrong_code)) == ["JAX102"]
+
+
+def test_lint_syntax_error_is_reported():
+    assert codes(lint_source("def broken(:\n")) == ["LINT000"]
