@@ -1,0 +1,130 @@
+"""Static rate-stability prover vs the co-simulation.
+
+The prover decides each (dag, fraction-of-planned-rate) cell of a fleet
+sweep with interval arithmetic alone (§6 recurrence vs §8.4.1 capacity)
+— no time loop, no jit.  This benchmark quantifies what that buys:
+
+* **agreement** — every cell the prover decides must match the
+  co-simulation's stable/unstable verdict (the soundness gate; a single
+  disagreement is an assertion failure);
+* **coverage** — the fraction of cells decided (undecided cells fall
+  back to simulation via ``cosimulate(prove=True)``);
+* **speedup** — prover wall time vs the batched numpy co-simulation of
+  the same sweep.
+
+Writes ``BENCH_prove.json`` (nightly artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import (DagArrive, FleetController, diamond_dag, linear_dag,
+                        paper_library, star_dag, traffic_dag)
+
+from .common import Table
+
+JSON_PATH = "BENCH_prove.json"
+
+MAKERS = {"linear": linear_dag, "diamond": diamond_dag, "star": star_dag,
+          "traffic": traffic_dag}
+
+
+def _controller(budget: int = 16, max_rate: float = 300.0):
+    lib = paper_library()
+    ctl = FleetController(lib, budget_slots=budget, mapper="sam", step=10.0,
+                          max_rate=max_rate, validate=False)
+    for name, maker in MAKERS.items():
+        ctl.apply(DagArrive(name, maker()))
+    return ctl
+
+
+def _agreement(ctl, fracs, duration=8.0, dt=0.1):
+    """(decided, total, mismatches, t_prove, t_sim) over the sweep."""
+    from repro.analysis.prove import PROVED_STABLE, prove_fleet
+
+    t0 = time.perf_counter()
+    proofs = prove_fleet(ctl.plan, ctl.models, fractions=fracs)
+    t_prove = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    report = ctl.cosimulate(fractions=fracs, duration=duration, dt=dt,
+                            engine="numpy")
+    t_sim = time.perf_counter() - t0
+
+    decided = total = mismatches = 0
+    for name, prs in proofs.items():
+        entry = report.entries[name]
+        for k, p in enumerate(prs):
+            total += 1
+            if not p.proved:
+                continue
+            decided += 1
+            if (p.verdict == PROVED_STABLE) != entry.results[k].stable:
+                mismatches += 1
+    return decided, total, mismatches, t_prove, t_sim
+
+
+def run() -> dict:
+    ctl = _controller()
+    fracs = np.linspace(0.25, 1.25, 9)
+    decided, total, mismatches, t_prove, t_sim = _agreement(ctl, fracs)
+    assert mismatches == 0, f"{mismatches} prover/simulator disagreements"
+
+    # the fast path: cosimulate(prove=True) skips the sweep for fully
+    # decided entries
+    t0 = time.perf_counter()
+    report = ctl.cosimulate(fractions=fracs, duration=8.0, dt=0.1,
+                            engine="numpy", prove=True)
+    t_fast = time.perf_counter() - t0
+    skipped = sum(1 for e in report.entries.values() if e.proved is not None)
+
+    table = Table(["metric", "value"])
+    table.add("cells decided", f"{decided}/{total}")
+    table.add("mismatches", mismatches)
+    table.add("prove wall s", t_prove)
+    table.add("sim wall s", t_sim)
+    table.add("speedup", t_sim / max(t_prove, 1e-9))
+    table.add("entries proved (fast path)",
+              f"{skipped}/{len(report.entries)}")
+    table.add("cosim(prove=True) wall s", t_fast)
+    print(table.render())
+
+    out = {"decided": decided, "total": total, "mismatches": mismatches,
+           "prove_s": t_prove, "sim_s": t_sim,
+           "speedup": t_sim / max(t_prove, 1e-9),
+           "fast_path_proved": skipped, "fast_path_s": t_fast}
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def smoke() -> dict:
+    """Tier-1-safe prover smoke: every decided cell of the smoke fleet
+    must agree with the co-simulation, and the ``prove=True`` fast path
+    must return the same planned-rate verdicts as a plain cosimulate."""
+    ctl = _controller(budget=10, max_rate=300.0)
+    fracs = np.linspace(0.25, 1.25, 9)
+    t0 = time.perf_counter()
+    decided, total, mismatches, _, _ = _agreement(ctl, fracs)
+    assert total > 0 and mismatches == 0, \
+        f"{mismatches} prover/simulator disagreements over {total} cells"
+
+    proved = ctl.cosimulate(fractions=fracs, duration=8.0, dt=0.1,
+                            engine="numpy", prove=True)
+    simmed = ctl.cosimulate(fractions=fracs, duration=8.0, dt=0.1,
+                            engine="numpy")
+    for name, ep in proved.entries.items():
+        es = simmed.entries[name]
+        assert ep.planned_is_stable == es.planned_is_stable, name
+    wall = time.perf_counter() - t0
+    print(f"prove smoke OK: {decided}/{total} cells decided, 0 mismatches, "
+          f"fast path consistent ({wall:.1f}s)")
+    return {"smoke_ok": True, "decided": decided, "total": total}
+
+
+if __name__ == "__main__":
+    run()

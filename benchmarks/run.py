@@ -14,7 +14,7 @@ import sys
 from . import (bench_app_dags, bench_fleet, bench_latency,
                bench_mapper_search, bench_micro_dags, bench_online,
                bench_optimized, bench_perfmodels, bench_predictability,
-               bench_roofline, bench_serving, bench_sweep)
+               bench_prove, bench_roofline, bench_serving, bench_sweep)
 from .common import timed
 
 BENCHES = [
@@ -27,6 +27,7 @@ BENCHES = [
     ("mapper_search", bench_mapper_search.run),
     ("fleet_planner", bench_fleet.run),
     ("online_controller", bench_online.run),
+    ("rate_prover", bench_prove.run),
     ("serving_planner", bench_serving.run),
     ("roofline_table", bench_roofline.run),
     ("perf_optimized", bench_optimized.run),
@@ -42,7 +43,8 @@ def main() -> None:
         rows = []
         for name, fn in (("sweep_smoke", bench_sweep.smoke),
                          ("mapper_search_smoke", bench_mapper_search.smoke),
-                         ("online_controller_smoke", bench_online.smoke)):
+                         ("online_controller_smoke", bench_online.smoke),
+                         ("rate_prover_smoke", bench_prove.smoke)):
             derived, us = timed(fn)
             rows.append((name, us, derived))
         print("\nname,us_per_call,derived")

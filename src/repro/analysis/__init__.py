@@ -7,11 +7,23 @@ Two layers share the :class:`~repro.core.diagnostics.Violation` vocabulary:
   ``FleetPlan``/``EventTrace``/``FleetController``) checking ~40
   structural invariants, cataloged in ``docs/INVARIANTS.md``;
 * :mod:`repro.analysis.lint` — a stdlib-``ast`` walk over source files
-  flagging JAX recompile hazards and race hazards.
+  flagging JAX recompile hazards and race hazards;
+* :mod:`repro.analysis.flow` (+ :mod:`.locks`, :mod:`.jaxflow`) —
+  interprocedural analyses on a project-wide call graph with per-function
+  CFGs and reaching definitions (:mod:`repro.analysis.cfg`): lock-order
+  deadlock cycles (RACE210-212) and cross-function JAX trace hazards
+  (JAX110-112);
+* :mod:`repro.analysis.prove` — the static rate-stability prover
+  (RATE301-309), interval arithmetic over the paper's §6 rate recurrence
+  vs §8.4.1 capacities (numpy-only, imported lazily so the lint CLI
+  stays light);
+* :mod:`repro.analysis.sarif` — SARIF 2.1.0 output for code scanning.
 
-``python -m repro.analysis src/`` runs the lint; ``--verify-smoke`` runs
-the verifier over freshly built paper fixtures.  The planner hooks
-(``plan(..., validate=True)`` etc.) call into :mod:`.verify` lazily.
+``python -m repro.analysis src/`` runs the lint, ``flow src/`` the
+interprocedural analyses, ``prove`` the prover over a paper-fixture
+fleet; ``--verify-smoke`` runs the verifier over freshly built paper
+fixtures.  The planner hooks (``plan(..., validate=True)`` etc.) call
+into :mod:`.verify` lazily.  See ``docs/ANALYSIS.md``.
 """
 
 from repro.core.diagnostics import (       # noqa: F401  (re-exports)
@@ -43,6 +55,13 @@ from repro.analysis.lint import (          # noqa: F401
     lint_source,
 )
 
+from repro.analysis.flow import (          # noqa: F401
+    FLOW_RULES,
+    Project,
+    analyze_paths,
+    analyze_project,
+)
+
 __all__ = [
     "Violation", "Severity", "Report", "PlanIntegrityError",
     "raise_if_errors", "default_validate", "set_default_validate",
@@ -51,4 +70,8 @@ __all__ = [
     "verify_schedule", "verify_fleet_plan", "verify_rate_decisions",
     "verify_trace", "verify_controller",
     "lint_source", "lint_paths", "RULES",
+    "analyze_paths", "analyze_project", "Project", "FLOW_RULES",
+    # repro.analysis.prove (lazy: pulls numpy + the predictor):
+    # prove_group_index, prove_allocation, prove_fleet, ProofResult,
+    # Interval, RATE_RULES
 ]

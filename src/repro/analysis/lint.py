@@ -17,13 +17,21 @@ path and ``path`` = ``file:line``.
 Suppression
 -----------
 A finding is suppressed by a trailing (or immediately preceding) comment
-on its line naming the rule with a reason::
+on its line naming the rule (or a comma-separated list of rules, or the
+``*`` wildcard for every rule) with a reason::
 
     self._ops[key] = jax.jit(fn)   # lint: ok JAX101 - one-time init cache
+    y = jax.jit(f)(x)              # lint: ok JAX101,JAX102 - one-shot tool
+    z = risky()                    # lint: ok * - exhaustively reviewed
 
 The reason text is required convention (the lint only checks the marker,
-reviewers check the reason).  ``lint_paths`` reports unsuppressed findings
-only; the CLI exits non-zero when any remain.
+reviewers check the reason).  A suppression naming a code that no rule
+owns (see :data:`KNOWN_CODES` — the lint rules plus the
+:mod:`repro.analysis.flow` interprocedural families) is reported as a
+``LINT001`` WARNING instead of being silently ignored: dead suppressions
+usually mean a typo that leaves the real finding live.  ``lint_paths``
+reports unsuppressed findings only; the CLI exits non-zero when any
+ERROR-severity finding remains.
 """
 
 from __future__ import annotations
@@ -36,7 +44,18 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tupl
 
 from repro.core.diagnostics import Severity, Violation
 
-_SUPPRESS_RE = re.compile(r"#\s*lint:\s*ok\s+([A-Z]+\d+)")
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*ok\s+(\*|[A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*)")
+
+#: Codes a suppression comment may legitimately name: the body-local lint
+#: rules below plus the interprocedural families of
+#: :mod:`repro.analysis.flow` (lock-order RACE21x, cross-function JAX11x).
+#: ``repro.analysis.flow`` asserts its analyzer codes stay a subset.
+KNOWN_CODES: Set[str] = {
+    "JAX101", "JAX102", "JAX103", "JAX104", "RACE201", "RACE202",
+    # repro.analysis.locks / repro.analysis.jaxflow (interprocedural)
+    "RACE210", "RACE211", "RACE212", "JAX110", "JAX111", "JAX112",
+}
 
 #: Mutating method names on dict/list/set that count as writes.
 _MUTATORS = {"append", "add", "update", "pop", "popitem", "setdefault",
@@ -54,7 +73,7 @@ class Rule:
 class _Module:
     """Parsed module plus the source-level context rules need."""
 
-    def __init__(self, filename: str, source: str):
+    def __init__(self, filename: str, source: str) -> None:
         self.filename = filename
         self.source = source
         self.lines = source.splitlines()
@@ -64,6 +83,18 @@ class _Module:
         for node in ast.walk(self.tree):
             for child in ast.iter_child_nodes(node):
                 self.parents[child] = node
+        # suppression map: line -> codes named there ("*" = everything)
+        self.suppress: Dict[int, Set[str]] = {}
+        self.unknown_suppressions: List[Tuple[int, str]] = []
+        for ln, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(1).split(",")}
+            self.suppress[ln] = codes
+            for c in sorted(codes):
+                if c != "*" and c not in KNOWN_CODES:
+                    self.unknown_suppressions.append((ln, c))
 
     def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
         while node in self.parents:
@@ -72,10 +103,9 @@ class _Module:
 
     def suppressed(self, line: int, code: str) -> bool:
         for ln in (line, line - 1):
-            if 1 <= ln <= len(self.lines):
-                m = _SUPPRESS_RE.search(self.lines[ln - 1])
-                if m and m.group(1) == code:
-                    return True
+            codes = self.suppress.get(ln)
+            if codes and (code in codes or "*" in codes):
+                return True
         return False
 
 
@@ -427,16 +457,27 @@ def lint_source(source: str, filename: str = "<string>",
             if include_suppressed or not mod.suppressed(line, rule.code):
                 out.append(Violation(rule.code, Severity.ERROR, filename,
                                      f"{filename}:{line}", detail))
+    for line, code in mod.unknown_suppressions:
+        out.append(Violation("LINT001", Severity.WARNING, filename,
+                             f"{filename}:{line}",
+                             f"suppression names unknown code {code!r} — "
+                             "typo? the finding it meant to silence (if any) "
+                             "is still reported"))
     return sorted(out, key=lambda v: (v.artifact, v.path, v.code))
 
 
 def iter_py_files(paths: Sequence[str]) -> List[str]:
+    """Every ``.py`` under ``paths``.  Walks skip ``fixtures`` subtrees —
+    those hold deliberately-buggy exemplars (``tests/fixtures/flow``) that
+    must not fail a whole-tree lint; point at the directory or file
+    explicitly to analyze them."""
     files: List[str] = []
     for p in paths:
         if os.path.isdir(p):
             for root, dirs, names in os.walk(p):
                 dirs[:] = sorted(d for d in dirs
-                                 if d not in ("__pycache__", ".git"))
+                                 if d not in ("__pycache__", ".git",
+                                              "fixtures"))
                 files.extend(os.path.join(root, n) for n in sorted(names)
                              if n.endswith(".py"))
         elif p.endswith(".py"):

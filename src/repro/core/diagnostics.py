@@ -64,7 +64,8 @@ class PlanIntegrityError(RuntimeError):
     Raised by the ``validate=`` hooks; ``violations`` holds every finding
     of the failing pass (warnings included) for structured handling."""
 
-    def __init__(self, violations: Sequence[Violation], context: str = ""):
+    def __init__(self, violations: Sequence[Violation],
+                 context: str = "") -> None:
         self.violations: List[Violation] = list(violations)
         errors = [v for v in self.violations if v.severity is Severity.ERROR]
         head = (f"{context}: " if context else "") + \

@@ -807,9 +807,14 @@ class FleetSimEntry:
     name: str
     omega_planned: float          # the fleet plan's rate for this DAG
     omegas: np.ndarray            # (K,) swept rates (fractions x planned)
-    results: List[SimResult]      # one per swept rate
+    results: List[SimResult]      # one per swept rate ([] when proved)
     predicted_max_rate: float     # §8.5 model prediction (no §8.4.2 penalty)
     actual_max_stable: float      # largest swept rate the simulation sustains
+    #: set when the static prover (repro.analysis.prove) decided every cell
+    #: of this entry's sweep and the simulation was skipped: the planned
+    #: cell's verdict ("proved_stable" / "proved_unstable"); None when the
+    #: entry was actually simulated
+    proved: Optional[str] = None
 
     @property
     def planned_is_stable(self) -> bool:

@@ -86,12 +86,13 @@ import numpy as np
 from .allocation import ALLOCATORS
 from .dag import Dataflow
 from .diagnostics import raise_if_errors, resolve_validate
-from .fleet import (FleetEntry, FleetPlan, FleetSimReport, ModelsArg,
-                    SlotSurfaceCache, UnsupportableDagError, _models_for,
-                    replan_incremental, simulate_fleet)
+from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
+                    ModelsArg, SlotSurfaceCache, UnsupportableDagError,
+                    _models_for, replan_incremental, simulate_fleet)
 from .mapping import (DEFAULT_VM_SIZES, InsufficientResourcesError,
                       Mapping as ThreadMapping, VM, acquire_vms)
-from .predictor import build_group_index, predict_resources_sweep
+from .predictor import (build_group_index, predict_max_rate_gi,
+                        predict_resources_sweep)
 from .routing import RoutingPolicy
 from .scheduler import MAX_EXTRA_SLOTS, Schedule, plan, replan_on_failure
 
@@ -429,15 +430,67 @@ class FleetController:
     def cosimulate(self, *, fractions: Optional[Sequence[float]] = None,
                    duration: float = 8.0, dt: float = 0.1,
                    warmup: float = 2.0, latency_sample_every: float = 0.25,
-                   engine: str = "scan") -> FleetSimReport:
+                   engine: str = "scan", prove: bool = False) -> FleetSimReport:
         """Predicted-vs-planned check of the live fleet: one batched
         co-simulation over the union VM pool (the entries' cached
         ``GroupIndex`` and the module-level compiled-kernel cache make
-        repeated controller steps recompile nothing)."""
-        return simulate_fleet(
-            self.plan, self.models, fractions=fractions, duration=duration,
-            dt=dt, warmup=warmup, latency_sample_every=latency_sample_every,
-            engine=engine, reuse_group_index=True)
+        repeated controller steps recompile nothing).
+
+        With ``prove=True`` the static rate-stability prover
+        (:mod:`repro.analysis.prove`, §6 recurrence vs §8.4.1 capacity over
+        interval arithmetic) runs first; entries whose every sweep cell is
+        decided (proved stable or proved unstable) skip the simulator
+        entirely and come back as synthetic :class:`FleetSimEntry` rows with
+        ``proved`` set and ``results=[]``.  Only the unprovable remainder is
+        simulated.  When nothing needs simulating the report's ``engine`` is
+        ``"proved"``."""
+        if not prove:
+            return simulate_fleet(
+                self.plan, self.models, fractions=fractions, duration=duration,
+                dt=dt, warmup=warmup,
+                latency_sample_every=latency_sample_every,
+                engine=engine, reuse_group_index=True)
+
+        from repro.analysis.prove import PROVED_STABLE, prove_fleet
+
+        fracs = (np.linspace(0.25, 1.25, 9) if fractions is None
+                 else np.asarray(list(fractions), dtype=np.float64))
+        k1 = int(np.argmin(np.abs(fracs - 1.0)))
+        proofs = prove_fleet(self.plan, self.models, fractions=fracs)
+
+        proved_entries: Dict[str, FleetSimEntry] = {}
+        rest: List[FleetEntry] = []
+        for e in self.plan.entries.values():
+            prs = proofs.get(e.name)
+            if (prs is not None and e.group_index is not None
+                    and all(p.proved for p in prs)):
+                stable = [p.omega for p in prs if p.verdict == PROVED_STABLE]
+                proved_entries[e.name] = FleetSimEntry(
+                    name=e.name, omega_planned=e.omega,
+                    omegas=np.asarray([p.omega for p in prs]), results=[],
+                    predicted_max_rate=predict_max_rate_gi(e.group_index),
+                    actual_max_stable=max(stable) if stable else 0.0,
+                    proved=prs[k1].verdict)
+            else:
+                rest.append(e)
+
+        if any(e.schedule is not None and e.omega > 0 for e in rest):
+            report = simulate_fleet(
+                dataclasses.replace(self.plan,
+                                    entries={e.name: e for e in rest}),
+                self.models,
+                fractions=fracs, duration=duration, dt=dt, warmup=warmup,
+                latency_sample_every=latency_sample_every,
+                engine=engine, reuse_group_index=True)
+        else:
+            report = FleetSimReport(
+                fractions=fracs, at_fraction=float(fracs[k1]), entries={},
+                skipped=[e.name for e in rest],
+                vm_cpu_predicted={}, vm_mem_predicted={},
+                vm_cpu_actual={}, vm_mem_actual={}, slot_busy={},
+                policy=self.plan.policy, engine="proved")
+        report.entries.update(proved_entries)
+        return report
 
     # -- internals -----------------------------------------------------------
     def _evict(self, name: str) -> None:

@@ -752,6 +752,7 @@ def _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
         return queues, busy, served_acc, realized, lat
 
     if not batched:
+        # lint: ok JAX110 - construction memoized by get_scan_kernel's cache
         return jax.jit(kernel, static_argnames=("steps", "sample_every",
                                                 "s0"))
 
@@ -762,6 +763,7 @@ def _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
                           sample_every=sample_every, s0=s0)
         return jax.vmap(one)(caps, g_frac, g_slot, hops)
 
+    # lint: ok JAX110 - construction memoized by get_scan_kernel's cache
     return jax.jit(batched_kernel, static_argnames=("steps", "sample_every",
                                                     "s0"))
 

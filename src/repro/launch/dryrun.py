@@ -103,6 +103,7 @@ def _lower_metrics(cfg: ModelConfig, shape: ShapeConfig, env: Env,
     """flops / bytes / collective wire bytes (per device) for one lowering."""
     fn, args, shardings, donate = build_cell(cfg, shape, env,
                                              microbatches=microbatches)
+    # lint: ok JAX110 - fresh lowering per call IS the cost measurement
     compiled = jax.jit(fn, in_shardings=shardings,
                        donate_argnums=donate).lower(*args).compile()
     cost = compat_cost_analysis(compiled)
@@ -180,6 +181,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         env = env_for_mesh(mesh, **(env_overrides or {}))
         fn, args, shardings, donate = build_cell(
             cfg, shape, env, microbatches=microbatches)
+        # lint: ok JAX110 - per-cell compile IS the dry-run measurement
         jitted = jax.jit(fn, in_shardings=shardings,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)

@@ -61,6 +61,10 @@ class Checkpointer:
         self.keep = keep
         self.async_save = async_save
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=2)
+        # guards _pending only; never held across a blocking .result()
+        # (hand-over-hand, see wait()) — repro.analysis flow RACE211's
+        # clean exemplar
+        self._lock = threading.Lock()
         self._pending: Optional[concurrent.futures.Future] = None
         os.makedirs(directory, exist_ok=True)
 
@@ -77,7 +81,9 @@ class Checkpointer:
         }
         self.wait()
         if self.async_save:
-            self._pending = self._pool.submit(self._write, step, host, manifest)
+            with self._lock:
+                self._pending = self._pool.submit(self._write, step, host,
+                                                  manifest)
         else:
             self._write(step, host, manifest)
 
@@ -105,9 +111,12 @@ class Checkpointer:
                           ignore_errors=True)
 
     def wait(self) -> None:
-        if self._pending is not None:
-            self._pending.result()
-            self._pending = None
+        # hand-over-hand: swap the future out under the lock, block on it
+        # with the lock RELEASED so a concurrent save() can't deadlock
+        with self._lock:
+            pending, self._pending = self._pending, None
+        if pending is not None:
+            pending.result()
 
     # -- restore ------------------------------------------------------------
     def all_steps(self) -> List[int]:

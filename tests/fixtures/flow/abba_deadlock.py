@@ -1,0 +1,32 @@
+"""Genuine ABBA deadlock: two lock-order edges forming a cycle.
+
+``transfer`` takes A then B; ``audit`` takes B then (via a helper) A.
+Two threads running one each can deadlock.  ``repro.analysis flow`` must
+report exactly one RACE210 cycle over {A, B}.
+"""
+
+import threading
+
+LOCK_A = threading.Lock()
+LOCK_B = threading.Lock()
+
+balance = {"a": 0, "b": 0}
+
+
+def transfer(amount: int) -> None:
+    with LOCK_A:
+        with LOCK_B:
+            balance["a"] -= amount
+            balance["b"] += amount
+
+
+def _sum_under_a() -> int:
+    # acquires A while the caller holds B: the reverse-order edge comes
+    # from the call graph, not from lexical nesting
+    with LOCK_A:
+        return balance["a"] + balance["b"]
+
+
+def audit() -> int:
+    with LOCK_B:
+        return _sum_under_a()

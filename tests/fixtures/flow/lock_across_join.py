@@ -1,0 +1,23 @@
+"""Lock held across a blocking join: RACE211.
+
+``drain`` holds the state lock while joining the worker; the worker's
+``push`` needs the same lock to finish, so the join can never return.
+One finding, anchored at the ``t.join()`` line.
+"""
+
+import threading
+
+_LOCK = threading.Lock()
+_items = []
+
+
+def push(x) -> None:
+    with _LOCK:
+        _items.append(x)
+
+
+def drain(t: threading.Thread):
+    with _LOCK:
+        t.join()
+        out, _items[:] = list(_items), []
+        return out

@@ -652,5 +652,34 @@ def test_lint_suppression_comment():
     assert codes(lint_source(wrong_code)) == ["JAX102"]
 
 
+def test_lint_suppression_comma_list():
+    """One comment may clear several codes on the same line."""
+    # RACE202 anchors on the def line, JAX102 on the call line: one
+    # comma-list comment per line clears both
+    src = ("import jax\n"
+           "def f(x, acc=[]):  # lint: ok RACE202, JAX102 - shared comment\n"
+           "    return jax.jit(g)(x), acc  # lint: ok JAX102, RACE202 - both\n")
+    assert lint_source(src) == []
+    assert codes(lint_source(src, include_suppressed=True)) == \
+        ["JAX102", "RACE202"]
+
+
+def test_lint_suppression_wildcard():
+    src = "import jax\ny = jax.jit(f)(x)  # lint: ok * - generated code\n"
+    assert lint_source(src) == []
+    assert codes(lint_source(src, include_suppressed=True)) == ["JAX102"]
+
+
+def test_lint_suppression_unknown_code_warns():
+    src = "x = 1  # lint: ok JAX999 - no such rule\n"
+    out = lint_source(src)
+    assert codes(out) == ["LINT001"]
+    assert all(v.severity is Severity.WARNING for v in out)
+    assert "JAX999" in out[0].detail
+    # known codes (including flow codes the lint pass itself never
+    # emits) stay silent
+    assert lint_source("x = 1  # lint: ok RACE210 - flow code\n") == []
+
+
 def test_lint_syntax_error_is_reported():
     assert codes(lint_source("def broken(:\n")) == ["LINT000"]

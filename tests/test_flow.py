@@ -1,0 +1,370 @@
+"""Mutation suite for the interprocedural flow engine.
+
+Mirrors ``test_analysis.py``'s protocol: one seeded bug per rule code
+with an exact-code assertion, the clean exemplars double as the
+zero-false-positive check, and the whole repo's ``src/`` tree must come
+back clean from ``analyze_paths`` (findings fixed or suppressed with a
+reason).  CFG/reaching-defs units pin the data-flow substrate the rules
+stand on.
+"""
+
+import ast
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis.cfg import CFG, ReachingDefs
+from repro.analysis.flow import Project, analyze_paths, analyze_project
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+FIXTURES = REPO / "tests" / "fixtures" / "flow"
+
+
+def codes(violations):
+    return sorted(v.code for v in violations)
+
+
+def flow_src(tmp_path, **files):
+    """Write ``name -> source`` modules and run the flow analyzers."""
+    paths = []
+    for name, src in files.items():
+        p = tmp_path / f"{name}.py"
+        p.write_text(textwrap.dedent(src))
+        paths.append(str(p))
+    return analyze_paths(paths)
+
+
+# -- CFG / reaching definitions ----------------------------------------------
+
+def _rd(src):
+    tree = ast.parse(textwrap.dedent(src))
+    fn = tree.body[0]
+    return fn, ReachingDefs(fn, fn.body, tuple(a.arg for a in fn.args.args))
+
+
+def _load(fn, name):
+    return [n for n in ast.walk(fn)
+            if isinstance(n, ast.Name) and n.id == name
+            and isinstance(n.ctx, ast.Load)][0]
+
+
+def test_rd_straight_line_single_def():
+    fn, rd = _rd("""
+        def f():
+            x = make()
+            use(x)
+    """)
+    vals = rd.may_values(_load(fn, "x"), "x")
+    assert len(vals) == 1 and isinstance(vals[0], ast.Call)
+
+
+def test_rd_branch_merges_both_defs():
+    fn, rd = _rd("""
+        def f(cond):
+            if cond:
+                x = a()
+            else:
+                x = b()
+            use(x)
+    """)
+    load = _load(fn, "x")
+    vals = rd.may_values(load, "x")
+    assert len(vals) == 2
+    assert sorted(v.func.id for v in vals) == ["a", "b"]
+
+
+def test_rd_redefinition_kills_earlier():
+    fn, rd = _rd("""
+        def f():
+            x = a()
+            x = b()
+            use(x)
+    """)
+    load = _load(fn, "x")
+    vals = rd.may_values(load, "x")
+    assert len(vals) == 1 and vals[0].func.id == "b"
+
+
+def test_rd_loop_carries_defs_around_back_edge():
+    fn, rd = _rd("""
+        def f(xs):
+            y = a()
+            for x in xs:
+                use(y)
+                y = b()
+    """)
+    load = _load(fn, "y")
+    names = sorted(v.func.id for v in rd.may_values(load, "y"))
+    assert names == ["a", "b"]       # both reach via entry and back edge
+
+
+def test_rd_param_is_opaque():
+    fn, rd = _rd("""
+        def f(x):
+            use(x)
+    """)
+    load = _load(fn, "x")
+    assert rd.may_values(load, "x") == [None]
+
+
+def test_rd_global_has_no_local_def():
+    fn, rd = _rd("""
+        def f():
+            use(GLOBAL)
+    """)
+    load = [n for n in ast.walk(fn)
+            if isinstance(n, ast.Name) and n.id == "GLOBAL"][0]
+    assert rd.may_values(load, "GLOBAL") == []
+
+
+def test_cfg_while_else_reachable():
+    tree = ast.parse(textwrap.dedent("""
+        def f(xs):
+            while cond():
+                step()
+            else:
+                done()
+            after()
+    """))
+    fn = tree.body[0]
+    cfg = CFG(fn, fn.body)
+    # every statement lands in some reachable block
+    texts = set()
+    seen, work = set(), [cfg.entry]
+    while work:
+        b = work.pop()
+        if b.bid in seen:
+            continue
+        seen.add(b.bid)
+        for ev in b.events:
+            texts.add(ast.dump(ev) if not isinstance(ev, ast.stmt)
+                      else type(ev).__name__)
+        work.extend(b.succ)
+    assert len(seen) >= 4            # head, body, else, after
+
+
+# -- fixture detection -------------------------------------------------------
+
+def test_fixture_abba_deadlock_detected():
+    out = analyze_paths([str(FIXTURES / "abba_deadlock.py")])
+    assert codes(out) == ["RACE210"]
+    assert "cycle" in out[0].detail
+
+
+def test_fixture_lock_across_join_detected():
+    out = analyze_paths([str(FIXTURES / "lock_across_join.py")])
+    assert codes(out) == ["RACE211"]
+
+
+def test_fixture_hand_over_hand_clean():
+    assert analyze_paths([str(FIXTURES / "hand_over_hand.py")]) == []
+
+
+def test_fixtures_pruned_from_tree_walks():
+    """`flow tests/` in CI must not trip over the deliberately-buggy
+    exemplars; pointing at the fixture dir itself still analyzes them."""
+    from repro.analysis.lint import iter_py_files
+    walked = iter_py_files([str(REPO / "tests")])
+    assert not any("fixtures" in f for f in walked)
+    direct = iter_py_files([str(FIXTURES)])
+    assert len(direct) == 3
+
+
+# -- mutation tests: one seeded bug per rule, exact-code assertions ----------
+
+def test_race210_abba_cycle_across_modules(tmp_path):
+    out = flow_src(tmp_path, locks="""
+        import threading
+        A = threading.Lock()
+        B = threading.Lock()
+        def ab():
+            with A:
+                with B:
+                    pass
+        def ba():
+            with B:
+                with A:
+                    pass
+    """)
+    assert codes(out) == ["RACE210"]
+
+
+def test_race210_clean_consistent_order(tmp_path):
+    assert flow_src(tmp_path, locks="""
+        import threading
+        A = threading.Lock()
+        B = threading.Lock()
+        def ab():
+            with A:
+                with B:
+                    pass
+        def also_ab():
+            with A:
+                with B:
+                    pass
+    """) == []
+
+
+def test_race211_join_under_lock(tmp_path):
+    out = flow_src(tmp_path, mod="""
+        import threading
+        L = threading.Lock()
+        def stop(t):
+            with L:
+                t.join()
+    """)
+    assert codes(out) == ["RACE211"]
+
+
+def test_race211_through_callee(tmp_path):
+    """The blocking call hides one call level down."""
+    out = flow_src(tmp_path, mod="""
+        import threading
+        L = threading.Lock()
+        def _drain(t):
+            t.join()
+        def stop(t):
+            with L:
+                _drain(t)
+    """)
+    assert codes(out) == ["RACE211"]
+
+
+def test_race212_reacquire_via_method(tmp_path):
+    out = flow_src(tmp_path, mod="""
+        import threading
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def _reset(self):
+                with self._lock:
+                    pass
+            def flush(self):
+                with self._lock:
+                    self._reset()
+    """)
+    assert codes(out) == ["RACE212"]
+
+
+def test_race212_rlock_is_fine(tmp_path):
+    assert flow_src(tmp_path, mod="""
+        import threading
+        class Box:
+            def __init__(self):
+                self._lock = threading.RLock()
+            def _reset(self):
+                with self._lock:
+                    pass
+            def flush(self):
+                with self._lock:
+                    self._reset()
+    """) == []
+
+
+def test_jax110_jit_reached_from_loop_via_helper(tmp_path):
+    out = flow_src(tmp_path, mod="""
+        import jax
+        def make_step(fn):
+            return jax.jit(fn)
+        def train(fns):
+            for fn in fns:
+                make_step(fn)
+    """)
+    assert codes(out) == ["JAX110"]
+
+
+def test_jax110_hoisted_clean(tmp_path):
+    assert flow_src(tmp_path, mod="""
+        import jax
+        def make_step(fn):
+            return jax.jit(fn)
+        def train(fn, xs):
+            step = make_step(fn)
+            for x in xs:
+                step(x)
+    """) == []
+
+
+def test_jax111_traced_value_into_python_branch(tmp_path):
+    out = flow_src(tmp_path, mod="""
+        import jax.numpy as jnp
+        def clamp(v, lo):
+            if v > 0:
+                return v
+            return lo
+        def run(x):
+            y = jnp.abs(x)
+            return clamp(y, 0.0)
+    """)
+    assert codes(out) == ["JAX111"]
+    assert "clamp" in out[0].detail
+
+
+def test_jax111_concrete_arg_clean(tmp_path):
+    assert flow_src(tmp_path, mod="""
+        import jax.numpy as jnp
+        def clamp(v, lo):
+            if v > 0:
+                return v
+            return lo
+        def run(n):
+            return clamp(float(n), 0.0)
+    """) == []
+
+
+def test_jax112_jit_of_factory_closure(tmp_path):
+    out = flow_src(tmp_path, mod="""
+        import jax
+        import numpy as np
+        def make_kernel(cfg):
+            scale = np.asarray(cfg)
+            def kernel(x):
+                return x * scale
+            return kernel
+        def build(cfg):
+            k = make_kernel(cfg)
+            return jax.jit(k)
+    """)
+    assert codes(out) == ["JAX112"]
+
+
+def test_jax112_plain_function_clean(tmp_path):
+    assert flow_src(tmp_path, mod="""
+        import jax
+        def kernel(x):
+            return x * 2
+        def build():
+            return jax.jit(kernel)
+    """) == []
+
+
+def test_flow_suppression_comment(tmp_path):
+    src = """
+        import threading
+        L = threading.Lock()
+        def stop(t):
+            with L:
+                t.join()  # lint: ok RACE211 - t never takes L
+    """
+    assert flow_src(tmp_path, mod=src) == []
+    p = tmp_path / "mod.py"
+    assert codes(analyze_paths([str(p)], include_suppressed=True)) == \
+        ["RACE211"]
+
+
+def test_flow_syntax_error_reported(tmp_path):
+    out = flow_src(tmp_path, broken="def oops(:\n")
+    assert codes(out) == ["LINT000"]
+
+
+# -- zero false positives on the real repo -----------------------------------
+
+def test_flow_clean_on_repo_src():
+    assert analyze_paths([str(SRC)]) == []
+
+
+def test_flow_clean_on_repo_tests_and_benchmarks():
+    assert analyze_paths([str(REPO / "tests"),
+                          str(REPO / "benchmarks")]) == []

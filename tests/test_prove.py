@@ -1,0 +1,207 @@
+"""Static rate-stability prover: interval units, verdict mutation tests,
+prover-vs-simulator agreement, and the ``cosimulate(prove=True)`` fast
+path.
+
+The agreement tests are the tentpole acceptance: on a mapped fleet the
+prover must never call a cell stable that the co-simulation shows
+unstable (or vice versa) — soundness over the §8.4.2 penalty is what the
+RATE303 escape hatch buys.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.analysis.prove import (PROVED_STABLE, PROVED_UNSTABLE, UNPROVABLE,
+                                  Interval, beta_intervals, prove_allocation,
+                                  prove_fleet, prove_group_index)
+from repro.core import (DagArrive, FleetController, build_group_index,
+                        diamond_dag, linear_dag, paper_library, plan,
+                        star_dag)
+from repro.core.routing import RoutingPolicy
+
+STEP, MAX_RATE = 10.0, 300.0
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return paper_library()
+
+
+@pytest.fixture(scope="module")
+def sched(lib):
+    return plan(linear_dag(), 40.0, lib)
+
+
+@pytest.fixture(scope="module")
+def gi(sched, lib):
+    # slot-aware routing matches the sam mapper's realized grouping; the
+    # shuffle view of the same mapping is ~10% over capacity at the
+    # planned rate (and correctly proves unstable there)
+    return build_group_index(sched.dag, sched.allocation, sched.mapping,
+                             lib, RoutingPolicy.SLOT_AWARE)
+
+
+@pytest.fixture(scope="module")
+def ctl(lib):
+    c = FleetController(lib, budget_slots=12, mapper="sam", step=STEP,
+                        max_rate=MAX_RATE, validate=False)
+    c.apply(DagArrive("linear", linear_dag()))
+    c.apply(DagArrive("diamond", diamond_dag()))
+    c.apply(DagArrive("star", star_dag()))
+    return c
+
+
+def codes(violations):
+    return sorted(v.code for v in violations)
+
+
+# -- interval arithmetic -----------------------------------------------------
+
+def test_interval_ops():
+    a, b = Interval(1.0, 2.0), Interval(3.0, 5.0)
+    assert (a + b) == Interval(4.0, 7.0)
+    assert (a * b) == Interval(3.0, 10.0)
+    assert a.scale(2.0) == Interval(2.0, 4.0)
+    assert Interval.point(4.0) == Interval(4.0, 4.0)
+
+
+def test_interval_rejects_empty():
+    with pytest.raises(ValueError):
+        Interval(2.0, 1.0)
+
+
+def test_beta_intervals_point_without_slack(gi):
+    betas = beta_intervals(gi)
+    for row, iv in enumerate(betas):
+        assert iv.lo == pytest.approx(iv.hi)
+        assert iv.lo == pytest.approx(float(gi.betas[row]), rel=1e-9)
+
+
+def test_beta_intervals_widen_with_slack(gi):
+    betas = beta_intervals(gi, selectivity_slack=0.1)
+    derived = [iv for row, iv in enumerate(betas) if gi.in_edges[row]]
+    assert derived, "fixture DAG has non-source tasks"
+    for iv in derived:
+        assert iv.lo < iv.hi
+
+
+# -- per-cell verdicts -------------------------------------------------------
+
+def test_planned_cell_proves_stable(gi, sched):
+    pr = prove_group_index(gi, sched.omega)
+    assert pr.verdict == PROVED_STABLE and pr.proved
+    # the planner allocates to exactly meet demand, so the binding margin
+    # is >= 0 but may be exactly 0 at the planned rate
+    assert pr.margin >= 0 and pr.violations == []
+
+
+def test_overdriven_cell_proves_unstable(gi, sched):
+    pr = prove_group_index(gi, sched.omega * 10.0)
+    assert pr.verdict == PROVED_UNSTABLE and pr.proved
+    assert "RATE301" in codes(pr.violations)
+
+
+def test_borderline_cell_unprovable(gi, sched):
+    """Huge selectivity slack makes the demand interval straddle capacity
+    somewhere — the cell must refuse a verdict, not guess."""
+    pr = prove_group_index(gi, sched.omega, selectivity_slack=0.9)
+    assert pr.verdict == UNPROVABLE and not pr.proved
+    assert "RATE302" in codes(pr.violations)
+
+
+def test_zero_capacity_demand_rate304(gi, sched):
+    gi2 = copy.deepcopy(gi)
+    gi2.g_cap[:] = 0.0
+    pr = prove_group_index(gi2, sched.omega)
+    assert pr.verdict == PROVED_UNSTABLE
+    assert set(codes(pr.violations)) == {"RATE304"}
+
+
+def test_cpu_oversub_rate303_unprovable(gi, sched):
+    """Inflate per-group CPU so the upper-bound slot CPU exceeds the core:
+    demand still fits capacity, but the §8.4.2 penalty might bite — the
+    prover must fall back to unprovable, never claim stable."""
+    gi2 = copy.deepcopy(gi)
+    gi2.g_cpu[:] = 5.0
+    pr = prove_group_index(gi2, sched.omega)
+    assert pr.verdict == UNPROVABLE
+    assert "RATE303" in codes(pr.violations)
+
+
+def test_corrupted_allocation_rate305(sched, lib):
+    alloc = copy.deepcopy(sched.allocation)
+    name = next(iter(alloc.tasks))
+    alloc.tasks[name].rate *= 3.0
+    pr = prove_allocation(sched.dag, alloc, lib)
+    assert "RATE305" in codes(pr.violations)
+    clean = prove_allocation(sched.dag, sched.allocation, lib)
+    assert "RATE305" not in codes(clean.violations)
+
+
+def test_allocation_overdriven_rate301(sched, lib):
+    alloc = copy.deepcopy(sched.allocation)
+    alloc.omega *= 50.0
+    for ta in alloc.tasks.values():
+        ta.rate *= 50.0              # keep §6 books balanced: isolate RATE301
+    pr = prove_allocation(sched.dag, alloc, lib)
+    assert pr.verdict == PROVED_UNSTABLE
+    assert "RATE301" in codes(pr.violations)
+
+
+# -- prover vs co-simulation (the acceptance gate) ---------------------------
+
+def test_prove_fleet_agrees_with_simulation(ctl):
+    """Every cell the prover decides must match the co-simulation's
+    stable/unstable verdict, across the whole smoke fleet sweep."""
+    fracs = np.linspace(0.25, 1.25, 9)
+    proofs = prove_fleet(ctl.plan, ctl.models, fractions=fracs)
+    report = ctl.cosimulate(fractions=fracs, duration=8.0, dt=0.1,
+                            engine="numpy")
+    assert proofs, "fleet has mapped entries"
+    checked = 0
+    for name, prs in proofs.items():
+        entry = report.entries[name]
+        for k, p in enumerate(prs):
+            if not p.proved:
+                continue
+            checked += 1
+            assert (p.verdict == PROVED_STABLE) == entry.results[k].stable, \
+                (name, p.omega, p.verdict)
+    assert checked > 0
+
+
+def test_prove_fleet_skips_unmapped(ctl, lib):
+    plan_ = ctl.plan
+    mutated = copy.deepcopy(plan_)
+    name = next(iter(mutated.entries))
+    mutated.entries[name].schedule = None
+    proofs = prove_fleet(mutated, lib)
+    assert name not in proofs
+
+
+# -- cosimulate(prove=True) fast path ----------------------------------------
+
+def test_cosimulate_prove_skips_simulation_when_all_proved(ctl):
+    report = ctl.cosimulate(prove=True)
+    assert report.engine == "proved"
+    assert set(report.entries) == {"linear", "diamond", "star"}
+    for e in report.entries.values():
+        assert e.proved in (PROVED_STABLE, PROVED_UNSTABLE)
+        assert e.results == []
+        assert e.predicted_max_rate > 0
+
+
+def test_cosimulate_prove_matches_plain_cosimulate(ctl):
+    proved = ctl.cosimulate(prove=True)
+    simmed = ctl.cosimulate(duration=8.0, dt=0.1, engine="numpy")
+    for name, ep in proved.entries.items():
+        es = simmed.entries[name]
+        assert ep.planned_is_stable == es.planned_is_stable, name
+        assert ep.actual_max_stable == pytest.approx(es.actual_max_stable)
+
+
+def test_cosimulate_without_prove_leaves_proved_none(ctl):
+    report = ctl.cosimulate(duration=8.0, dt=0.1, engine="numpy")
+    assert all(e.proved is None for e in report.entries.values())
