@@ -15,15 +15,27 @@ pure function of the slot estimates and must agree exactly.
 from __future__ import annotations
 
 import itertools
+import json
 import time
 
-from repro.core import ALL_DAGS, paper_library, plan_fleet
+from repro.core import (ALL_DAGS, VmClass, paper_library, plan_fleet,
+                        vm_classes_from_sizes)
 from repro.core.scheduler import max_planned_rate
 
 from .common import Table
 
 SIZES = (2, 3, 4, 6)
 BUDGETS = (16, 32, 64)
+
+JSON_PATH = "BENCH_cost.json"
+#: dollar budgets swept by the cost-vs-rate frontier
+DOLLAR_BUDGETS = (0.5, 1.0, 1.5, 2.0, 3.0, 4.0)
+#: homogeneous fleet: one big class at the flat per-slot price
+HOMOGENEOUS = (VmClass("d4", 4, cost_per_hour=0.392),)
+#: mixed fleet: the same big class plus a discounted small class — a
+#: superset of the homogeneous offering, so its frontier must dominate
+MIXED = (VmClass("d4", 4, cost_per_hour=0.392),
+         VmClass("d1-spot", 1, cost_per_hour=0.070))
 
 
 def run() -> dict:
@@ -74,5 +86,77 @@ def run() -> dict:
             "allocator_call_ratio": round(ratio, 1)}
 
 
+def cost_frontier() -> dict:
+    """min_cost frontier sweep: total planned rate vs dollar budget for a
+    homogeneous one-class fleet and a mixed two-class fleet (the same big
+    class plus a discounted small one).  The mixed offering is a strict
+    superset, so at every budget its rate must be >= the homogeneous
+    rate — the dominance check below pins the water-fill on the $/rate
+    surface.  Writes the frontier to ``BENCH_cost.json``."""
+    lib = paper_library()
+    dags = {f"{n}0": ALL_DAGS[n]() for n in ("linear", "diamond", "star")}
+    tbl = Table(["budget_$/h", "homog_rate", "homog_$/h", "mixed_rate",
+                 "mixed_$/h", "dominates"])
+    frontier = []
+    all_dominate = True
+    for budget in DOLLAR_BUDGETS:
+        plans = {}
+        for label, classes in (("homog", HOMOGENEOUS), ("mixed", MIXED)):
+            fp = plan_fleet(dags, lib, budget_dollars=budget,
+                            objective="min_cost", mapper="dsm",
+                            vm_sizes=classes)
+            plans[label] = fp
+        hr, mr = plans["homog"].total_rate, plans["mixed"].total_rate
+        dominates = mr >= hr
+        all_dominate &= dominates
+        tbl.add(budget, round(hr, 0), round(plans["homog"].cost_per_hour, 3),
+                round(mr, 0), round(plans["mixed"].cost_per_hour, 3),
+                dominates)
+        frontier.append({
+            "budget_dollars": budget,
+            "homog_rate": hr, "homog_cost": plans["homog"].cost_per_hour,
+            "mixed_rate": mr, "mixed_cost": plans["mixed"].cost_per_hour,
+        })
+    tbl.show("cost-vs-rate frontier: homogeneous vs mixed VM classes")
+    derived = {"mixed_dominates_homogeneous": all_dominate,
+               "frontier": frontier}
+    with open(JSON_PATH, "w") as f:
+        json.dump(derived, f, indent=2, sort_keys=True)
+    print(f"wrote {JSON_PATH}")
+    return derived
+
+
+def smoke() -> dict:
+    """Tier-1-safe heterogeneity smoke: a unit-speed/unit-cost class family
+    of sizes (4,2,1) must reproduce the plain-int plan exactly (rates AND
+    pool shape) for every slot-budget objective, and a two-class min_cost
+    plan must respect its dollar budget."""
+    lib = paper_library()
+    dags = {"lin": ALL_DAGS["linear"](), "star": ALL_DAGS["star"]()}
+    unit = vm_classes_from_sizes((4, 2, 1))
+    match = True
+    for objective in ("max_min", "weighted", "priority"):
+        fp_int = plan_fleet(dags, lib, budget_slots=20, objective=objective,
+                            mapper="dsm", step=10.0, max_rate=500.0,
+                            vm_sizes=(4, 2, 1))
+        fp_cls = plan_fleet(dags, lib, budget_slots=20, objective=objective,
+                            mapper="dsm", step=10.0, max_rate=500.0,
+                            vm_sizes=unit)
+        match &= all(fp_int.entries[n].omega == fp_cls.entries[n].omega
+                     for n in dags)
+        match &= ([(vm.id, vm.num_slots, vm.rack) for vm in fp_int.pool]
+                  == [(vm.id, vm.num_slots, vm.rack) for vm in fp_cls.pool])
+    assert match, "unit-class plans diverged from plain-int plans"
+    fp = plan_fleet(dags, lib, budget_dollars=1.5, objective="min_cost",
+                    mapper="dsm", step=10.0, max_rate=500.0,
+                    vm_sizes=MIXED)
+    assert fp.cost_per_hour <= 1.5 + 1e-9, fp.cost_per_hour
+    assert fp.total_rate > 0
+    return {"unit_class_plans_match": match,
+            "min_cost_rate": fp.total_rate,
+            "min_cost_dollars": round(fp.cost_per_hour, 3)}
+
+
 if __name__ == "__main__":
     run()
+    cost_frontier()

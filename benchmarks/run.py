@@ -26,6 +26,7 @@ BENCHES = [
     ("sweep_engine", bench_sweep.run),
     ("mapper_search", bench_mapper_search.run),
     ("fleet_planner", bench_fleet.run),
+    ("fleet_cost_frontier", bench_fleet.cost_frontier),
     ("online_controller", bench_online.run),
     ("rate_prover", bench_prove.run),
     ("serving_planner", bench_serving.run),
@@ -44,7 +45,8 @@ def main() -> None:
         for name, fn in (("sweep_smoke", bench_sweep.smoke),
                          ("mapper_search_smoke", bench_mapper_search.smoke),
                          ("online_controller_smoke", bench_online.smoke),
-                         ("rate_prover_smoke", bench_prove.smoke)):
+                         ("rate_prover_smoke", bench_prove.smoke),
+                         ("fleet_cost_smoke", bench_fleet.smoke)):
             derived, us = timed(fn)
             rows.append((name, us, derived))
         print("\nname,us_per_call,derived")

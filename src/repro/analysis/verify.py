@@ -237,16 +237,43 @@ def verify_schedule(schedule, gi=None) -> List[Violation]:
     and routing fractions consistent with the mapping (§11 routing)."""
     art = f"Schedule[{schedule.dag.name}@{schedule.omega:g}]"
     out: List[Violation] = []
+    # VM class soundness first: the speed-aware checks below lean on it
+    speeds = set()
+    mixed = False
+    for i, vm in enumerate(schedule.vms):
+        bad = []
+        if not (np.isfinite(vm.speed) and vm.speed > 0):
+            bad.append(f"speed={vm.speed!r}")
+        if not (np.isfinite(vm.mem_per_slot) and vm.mem_per_slot > 0):
+            bad.append(f"mem_per_slot={vm.mem_per_slot!r}")
+        if vm.cost_per_hour is not None and not (
+                np.isfinite(vm.cost_per_hour) and vm.cost_per_hour >= 0):
+            bad.append(f"cost_per_hour={vm.cost_per_hour!r}")
+        if bad:
+            out.append(_v("RES_BAD_CLASS", Severity.ERROR, art, f"vms[{i}]",
+                          f"VM {vm.id} has invalid class parameters: "
+                          + ", ".join(bad)))
+        else:
+            speeds.add(vm.speed)
+    if len(speeds) > 1:
+        mixed = True
+        out.append(_v("RES_MIXED_SPEED", Severity.ERROR, art, "vms",
+                      f"pool mixes slot speeds {sorted(speeds)}; a DAG's "
+                      "allocation assumes one uniform effective rate (§6)"))
+    pool_spd = speeds.pop() if len(speeds) == 1 else 1.0
     if not np.isfinite(schedule.omega) or schedule.omega < 0:
         out.append(_v("SCH_BAD_OMEGA", Severity.ERROR, art, "omega",
                       f"planned rate {schedule.omega!r} must be finite "
                       "and >= 0"))
-    elif not _close(schedule.allocation.omega, schedule.omega):
+    elif not mixed and not _close(schedule.allocation.omega * pool_spd,
+                                  schedule.omega):
         out.append(_v("SCH_ALLOC_OMEGA_MISMATCH", Severity.ERROR, art,
                       "allocation.omega",
                       f"schedule planned at {schedule.omega:g} but its "
                       f"allocation was computed at "
-                      f"{schedule.allocation.omega:g}"))
+                      f"{schedule.allocation.omega:g} on a speed-"
+                      f"{pool_spd:g} pool (expected effective rate "
+                      f"omega/speed)"))
     vm_ids = [vm.id for vm in schedule.vms]
     if len(set(vm_ids)) != len(vm_ids):
         dups = sorted({i for i in vm_ids if vm_ids.count(i) > 1})
@@ -368,6 +395,22 @@ def verify_fleet_plan(plan, models=None, *, deep: bool = False,
     walk = None if schedules_for is None else set(schedules_for)
     owner: Dict[int, str] = {}
     pool_want: List[int] = []
+    cost_matrix = getattr(plan, "cost_matrix", None)
+    # surface rows of a heterogeneous plan were computed at the classes'
+    # speed/mem; the deep spot-check must recompute at the same point.
+    # min_cost rows mix per-cell winning classes — no single class to
+    # recompute with, so the spot-check is skipped there.
+    spot_speed = spot_mem = 1.0
+    spot_ok = cost_matrix is None
+    classes = getattr(plan, "vm_classes", ())
+    if spot_ok and classes:
+        spds = {c.speed for c in classes}
+        mems = {c.mem_per_slot for c in classes}
+        if len(spds) == 1 and len(mems) == 1:
+            spot_speed, spot_mem = spds.pop(), mems.pop()
+        else:
+            spot_ok = False
+    dollars_total = 0.0
     for d, (name, e) in enumerate(plan.entries.items()):
         path = f"entries[{name!r}]"
         if e.grid_index >= 0:
@@ -385,6 +428,17 @@ def verify_fleet_plan(plan, models=None, *, deep: bool = False,
                               art, path,
                               f"estimated_slots={e.estimated_slots} but the "
                               f"surface row says {want}"))
+            if (cost_matrix is not None
+                    and 0 <= e.grid_index < cost_matrix.shape[1]):
+                want_cost = float(cost_matrix[d, e.grid_index])
+                dollars_total += e.est_cost_per_hour
+                if not _close(e.est_cost_per_hour, want_cost):
+                    out.append(_v("FLT_COST_MISMATCH", Severity.ERROR, art,
+                                  path,
+                                  f"est_cost_per_hour="
+                                  f"${e.est_cost_per_hour:g}/h but the cost "
+                                  f"surface says ${want_cost:g}/h at "
+                                  f"grid[{e.grid_index}]"))
         else:
             if e.omega != 0.0 or e.estimated_slots != 0:
                 out.append(_v("FLT_GRID_MISMATCH", Severity.ERROR, art, path,
@@ -407,29 +461,50 @@ def verify_fleet_plan(plan, models=None, *, deep: bool = False,
         if walk is not None and name not in walk:
             continue
         # surface-row monotonicity within the un-clipped prefix (the level
-        # bisection / water-fill correctness assumption, §8.5)
+        # bisection / water-fill correctness assumption, §8.5).  min_cost
+        # selects over the COST surface — the best-class slot row may dip
+        # where the winning class switches, so the cost row carries the
+        # monotonicity contract there.
         row = np.asarray(plan.slots_matrix[d], dtype=np.int64)
         finite = row < CLIP_SENTINEL
         prefix = int(np.argmin(finite)) if not finite.all() else len(row)
-        if prefix > 1 and np.any(np.diff(row[:prefix]) < 0):
+        if cost_matrix is not None:
+            crow = np.asarray(cost_matrix[d], dtype=float)
+            cfin = np.isfinite(crow)
+            cpre = int(np.argmin(cfin)) if not cfin.all() else len(crow)
+            if cpre > 1 and np.any(np.diff(crow[:cpre]) < -1e-9):
+                k = int(np.flatnonzero(np.diff(crow[:cpre]) < -1e-9)[0])
+                out.append(_v("FLT_SURFACE_NONMONOTONE", Severity.ERROR, art,
+                              f"cost_matrix[{d}, {k}:{k + 2}]",
+                              f"cost surface for {name!r} decreases "
+                              f"(${crow[k]:g}/h -> ${crow[k + 1]:g}/h) "
+                              "within its feasible prefix"))
+        elif prefix > 1 and np.any(np.diff(row[:prefix]) < 0):
             k = int(np.flatnonzero(np.diff(row[:prefix]) < 0)[0])
             out.append(_v("FLT_SURFACE_NONMONOTONE", Severity.ERROR, art,
                           f"slots_matrix[{d}, {k}:{k + 2}]",
                           f"slot surface for {name!r} decreases "
                           f"({int(row[k])} -> {int(row[k + 1])}) within its "
                           "feasible prefix"))
-        if deep and models is not None and grid_ok:
+        if deep and models is not None and grid_ok and spot_ok:
             alg = allocator or (e.schedule.allocator if e.schedule else None)
             if alg is not None and prefix > 0:
                 out.extend(_spot_check_surface(
                     e, row, plan.grid, prefix, _models_for(models, name),
-                    alg, art, d))
+                    alg, art, d, speed=spot_speed, mem_per_slot=spot_mem))
     total = plan.total_estimated_slots
-    if total > plan.budget_slots:
+    if plan.budget_slots is not None and total > plan.budget_slots:
         out.append(_v("FLT_BUDGET_EXCEEDED", Severity.ERROR, art,
                       "entries",
                       f"estimated slots {total} exceed the budget "
                       f"{plan.budget_slots}"))
+    budget_dollars = getattr(plan, "budget_dollars", None)
+    if (cost_matrix is not None and budget_dollars is not None
+            and dollars_total > budget_dollars * (1 + REL_TOL)):
+        out.append(_v("FLT_BUDGET_DOLLARS_EXCEEDED", Severity.ERROR, art,
+                      "entries",
+                      f"estimated fleet cost ${dollars_total:g}/h exceeds "
+                      f"the budget ${budget_dollars:g}/h"))
     if sorted(vm.id for vm in plan.pool) != sorted(pool_want):
         out.append(_v("FLT_POOL_MISMATCH", Severity.ERROR, art, "pool",
                       f"pool VM ids {sorted(vm.id for vm in plan.pool)} != "
@@ -439,14 +514,17 @@ def verify_fleet_plan(plan, models=None, *, deep: bool = False,
 
 def _spot_check_surface(entry, row: np.ndarray, grid: np.ndarray,
                         prefix: int, models: ModelLibrary, allocator: str,
-                        art: str, d: int) -> List[Violation]:
+                        art: str, d: int, *, speed: float = 1.0,
+                        mem_per_slot: float = 1.0) -> List[Violation]:
     """Recompute up to three cells of a cached surface row with a fresh
     ``batch_slots`` pass — catches a stale/corrupted ``SlotSurfaceCache``
-    without paying a full grid pass."""
+    without paying a full grid pass.  ``speed``/``mem_per_slot`` replay the
+    VM class the row was computed for."""
     from repro.core.batch import batch_slots
     ks = sorted({0, max(0, min(entry.grid_index, prefix - 1)), prefix - 1})
     fresh = batch_slots(entry.dag, grid[ks], models, allocator,
-                        clip_unsupportable=True)
+                        clip_unsupportable=True, speed=speed,
+                        mem_per_slot=mem_per_slot)
     out: List[Violation] = []
     for k, got in zip(ks, fresh):
         if int(row[k]) != int(got):

@@ -32,10 +32,13 @@ from .allocation import (ALLOCATORS, Allocation, TaskAllocation,
                          UnsupportableRateError, allocate_lsa, allocate_mba)
 from .batch import (BatchAllocation, batch_allocate, batch_feasible,
                     batch_slots)
-from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
-                      Mapping, SlotId, Thread, VM, acquire_vms, local_moves,
+from .mapping import (DEFAULT_VM_SIZES, MAPPERS, PRICE_PER_SLOT_HOUR,
+                      InsufficientResourcesError, Mapping, SlotId, Thread, VM,
+                      VM_CLASS_FAMILIES, VmClass, acquire_vms, local_moves,
                       map_dsm, map_rsm, map_sam, mapping_signature,
-                      remap_threads)
+                      pool_cost_per_hour, pool_speed, remap_threads,
+                      resolve_vm_classes, unit_vm_like, vm_class_family,
+                      vm_classes_from_sizes, vm_sizes_speed)
 from .routing import RoutingPolicy
 from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
                         build_group_index, effective_capacity_matrix,

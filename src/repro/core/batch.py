@@ -63,8 +63,14 @@ class BatchAllocation:
         profiles can demand astronomically many slots; both are clamped to
         2**62 (exactly float64-representable) before the integer cast, so
         they never wrap negative and no real budget ever fits them."""
+        return self.slots_for()
+
+    def slots_for(self, mem_per_slot: float = 1.0) -> np.ndarray:
+        """:attr:`slots` on a VM class whose slots hold ``mem_per_slot``
+        memory quanta each: the memory term shrinks by that factor while
+        the CPU term (one core per slot) is unchanged."""
         rho = np.maximum(np.ceil(self.total_cpu - 1e-9),
-                         np.ceil(self.total_mem - 1e-9))
+                         np.ceil(self.total_mem / mem_per_slot - 1e-9))
         rho = np.clip(rho, 1, 2.0 ** 62)
         return np.where(np.isnan(rho), 2.0 ** 62, rho).astype(np.int64)
 
@@ -148,7 +154,8 @@ _BATCH_ALLOCATORS: Dict[str, Callable] = {"lsa": _lsa_task, "mba": _mba_task}
 
 def batch_allocate(dag: Dataflow, omegas: Sequence[float],
                    models: ModelLibrary, algorithm: str = "mba",
-                   *, clip_unsupportable: bool = False) -> BatchAllocation:
+                   *, clip_unsupportable: bool = False,
+                   speed: float = 1.0) -> BatchAllocation:
     """Allocate ``dag`` at every rate in ``omegas`` in one array pass.
 
     A rate no thread count supports raises
@@ -156,14 +163,23 @@ def batch_allocate(dag: Dataflow, omegas: Sequence[float],
     allocators; with ``clip_unsupportable`` those cells instead get infinite
     CPU/mem (zero threads), so sweeping planners see them as infeasible at
     any budget rather than aborting the whole grid pass.
+
+    ``speed`` is the slot speed of the target VM class: a thread on a
+    ``speed=s`` slot serves ``s``× the profiled §6 service rate, so the
+    allocator sizes threads/CPU/mem at the *effective* per-task rate
+    ``beta_t * omega / s`` while :attr:`BatchAllocation.rates` keeps the
+    real rates.
     """
+    if speed <= 0:
+        raise ValueError("speed must be positive")
     task_fn = _BATCH_ALLOCATORS[algorithm]
     omegas = np.asarray(omegas, dtype=float)
     betas = dag.get_rates(1.0)
     names, rates, threads, cpu, mem = [], [], [], [], []
     for t in dag.topo_order():
         model = models[t.kind]
-        w = betas[t.name] * omegas
+        w_real = betas[t.name] * omegas
+        w = w_real / speed
         if model.static:
             tau = np.ones_like(w, dtype=int)
             c = np.full_like(w, model.C(1))
@@ -171,7 +187,7 @@ def batch_allocate(dag: Dataflow, omegas: Sequence[float],
         else:
             tau, c, m = task_fn(model, w, t.name, clip_unsupportable)
         names.append(t.name)
-        rates.append(w)
+        rates.append(w_real)
         threads.append(tau)
         cpu.append(c)
         mem.append(m)
@@ -182,10 +198,14 @@ def batch_allocate(dag: Dataflow, omegas: Sequence[float],
 
 def batch_slots(dag: Dataflow, omegas: Sequence[float], models: ModelLibrary,
                 algorithm: str = "mba",
-                *, clip_unsupportable: bool = False) -> np.ndarray:
-    """Slot estimate rho for every rate — the bisection feasibility oracle."""
+                *, clip_unsupportable: bool = False, speed: float = 1.0,
+                mem_per_slot: float = 1.0) -> np.ndarray:
+    """Slot estimate rho for every rate — the bisection feasibility oracle.
+    ``speed``/``mem_per_slot`` target a specific VM class (defaults: the
+    homogeneous unit-slot model, bit-identical to the baseline)."""
     return batch_allocate(dag, omegas, models, algorithm,
-                          clip_unsupportable=clip_unsupportable).slots
+                          clip_unsupportable=clip_unsupportable,
+                          speed=speed).slots_for(mem_per_slot)
 
 
 def batch_feasible(dags: Mapping[str, Dataflow] | Sequence[Dataflow],

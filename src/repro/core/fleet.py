@@ -50,6 +50,15 @@ Objectives
               ``weights`` compose with tiers) and lower tiers split what
               is left — when the budget shrinks, the lowest tier loses
               rate first (:meth:`FleetPlan.preemption_order`).
+``min_cost``  heterogeneous cost-aware rates: the budget is expressed in
+              *dollars per hour* (``budget_dollars``), each (dag, rate)
+              cell is priced at the cheapest VM class that covers its
+              per-class slot estimate (speed/memory-aware surfaces, one
+              per class), and the same level bisection + water-fill runs
+              on the $/rate surface — every increment buys rate for the
+              DAG where it is cheapest.  Each planned DAG's pool is
+              acquired from its chosen class.  ``weights`` compose as in
+              ``weighted``.
 
 Like ``max_planned_rate``'s bisection, the level bisection and water-fill
 assume the slot surface is nondecreasing in rate within each DAG's
@@ -69,7 +78,9 @@ from .allocation import UnsupportableRateError
 from .batch import batch_slots, bisect_largest_true, prefix_feasible_count
 from .dag import Dataflow
 from .diagnostics import raise_if_errors, resolve_validate
-from .mapping import DEFAULT_VM_SIZES, VM, SlotId, acquire_vms
+from .mapping import (DEFAULT_VM_SIZES, VM, SlotId, VmClass, VmSizesArg,
+                      acquire_vms, pool_cost_per_hour, resolve_vm_classes,
+                      vm_sizes_speed)
 from .perfmodel import ModelLibrary
 from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
                         build_group_index, predict_max_rate_gi,
@@ -80,7 +91,7 @@ from .simulator import DataflowSimulator, SimResult, SweepBatch
 
 ModelsArg = Union[ModelLibrary, Mapping[str, ModelLibrary]]
 
-OBJECTIVES = ("max_min", "weighted", "priority")
+OBJECTIVES = ("max_min", "weighted", "priority", "min_cost")
 
 
 class UnsupportableDagError(UnsupportableRateError):
@@ -89,17 +100,20 @@ class UnsupportableDagError(UnsupportableRateError):
     unsupportable outright).  Raised by :func:`plan_fleet` and the online
     controller's admission path instead of silently planning the DAG at
     zero rate — a *contended* zero rate (priority preemption, crowded
-    budget) is normal and does not raise."""
+    budget) is normal and does not raise.  Under ``min_cost`` the budget
+    is dollars per hour (``unit="$/h"``)."""
 
     code = "FLT_UNSUPPORTABLE_DAG"
 
-    def __init__(self, dag: str, floor_rate: float, budget_slots: int):
+    def __init__(self, dag: str, floor_rate: float,
+                 budget_slots: Union[int, float], unit: str = "slots"):
         super().__init__(
             dag, floor_rate,
-            f"DAG {dag!r} does not fit {budget_slots} slots even at its "
+            f"DAG {dag!r} does not fit {budget_slots:g} {unit} even at its "
             f"floor rate {floor_rate:g} t/s")
         self.dag = dag
         self.budget_slots = budget_slots
+        self.unit = unit
 
     def to_violation(self):
         from .diagnostics import Severity, Violation
@@ -121,16 +135,19 @@ def _level_indices(grid: np.ndarray, weights: np.ndarray, caps: np.ndarray,
     return np.minimum(idx, caps - 1)
 
 
-def _cost(slots: np.ndarray, idx: np.ndarray) -> int:
-    """Total slot cost of a per-DAG grid-index vector (-1 = zero rate)."""
+def _cost(slots: np.ndarray, idx: np.ndarray) -> float:
+    """Total cost of a per-DAG grid-index vector (-1 = zero rate).  The
+    surface is int slots for the slot-budget objectives and float $/hour
+    for ``min_cost``; float64 sums int slot counts exactly (rows are
+    clamped at 2**62)."""
     picked = np.take_along_axis(slots, np.maximum(idx, 0)[:, None],
                                 axis=1)[:, 0]
-    return int(np.where(idx >= 0, picked, 0).sum())
+    return float(np.where(idx >= 0, picked, 0).sum(dtype=np.float64))
 
 
 def _bisect_common_level(grid: np.ndarray, slots: np.ndarray,
                          caps: np.ndarray, weights: np.ndarray,
-                         budget: int) -> np.ndarray:
+                         budget: float) -> np.ndarray:
     """Largest common fairness level ``theta`` (every DAG at the largest
     grid rate <= weight * theta, capped by its own ceiling) whose total
     slot cost fits the budget — O(log(D*K)) array probes."""
@@ -151,7 +168,7 @@ def _bisect_common_level(grid: np.ndarray, slots: np.ndarray,
 
 
 def _water_fill(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
-                weights: np.ndarray, budget: int, idx: np.ndarray
+                weights: np.ndarray, budget: float, idx: np.ndarray
                 ) -> np.ndarray:
     """Greedy lexicographic water-fill of the leftover budget: repeatedly
     advance the DAG with the lowest current ``rate/weight`` (cheapest next
@@ -170,11 +187,11 @@ def _water_fill(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
     def ratio(d: int) -> float:
         return float(grid[idx[d]] / weights[d]) if idx[d] >= 0 else 0.0
 
-    def incr(d: int) -> int:
-        nxt = int(slots[d, idx[d] + 1])
-        return nxt - (int(slots[d, idx[d]]) if idx[d] >= 0 else 0)
+    def incr(d: int) -> float:
+        nxt = float(slots[d, idx[d] + 1])
+        return nxt - (float(slots[d, idx[d]]) if idx[d] >= 0 else 0.0)
 
-    heap: List[Tuple[float, int, int]] = [
+    heap: List[Tuple[float, float, int]] = [
         (ratio(d), incr(d), d) for d in range(len(weights))
         if idx[d] + 1 < caps[d]]
     heapq.heapify(heap)
@@ -190,7 +207,7 @@ def _water_fill(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
 
 
 def _fill_exact(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
-                weights: np.ndarray, budget: int) -> np.ndarray:
+                weights: np.ndarray, budget: float) -> np.ndarray:
     """Exact lexicographic water-fill for unequal-weight ratio ladders.
 
     Recursive bottleneck solver: maximize the minimum ``rate/weight`` by a
@@ -216,8 +233,8 @@ def _fill_exact(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
                                 side="left"))
         return j if j < caps[d] else None
 
-    def cost(d: int, j: int) -> int:
-        return int(slots[d, j]) if j >= 0 else 0
+    def cost(d: int, j: int) -> float:
+        return float(slots[d, j]) if j >= 0 else 0.0
 
     def ratio(d: int, j: int) -> float:
         return float(grid[j] / weights[d]) if j >= 0 else 0.0
@@ -230,7 +247,7 @@ def _fill_exact(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
                   if ladders else np.zeros(1))
 
         def fits(k: int) -> bool:
-            total = 0
+            total = 0.0
             for d in active:
                 j = min_idx(d, float(levels[k]))
                 if j is None:
@@ -247,7 +264,7 @@ def _fill_exact(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
         for d in active:
             nxt = base[d] + 1
             if nxt >= caps[d] or \
-                    base_cost - cost(d, base[d]) + int(slots[d, nxt]) > b:
+                    base_cost - cost(d, base[d]) + float(slots[d, nxt]) > b:
                 stuck.append(d)
         if stuck:
             rest = [d for d in active if d not in stuck]
@@ -271,12 +288,12 @@ def _fill_exact(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
                 best_sol, best_key = sub, key
         return best_sol
 
-    sol = solve(list(range(len(weights))), int(budget))
+    sol = solve(list(range(len(weights))), float(budget))
     return np.array([sol[d] for d in range(len(weights))], dtype=int)
 
 
 def _plan_rates(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
-                weights: np.ndarray, budget: int) -> np.ndarray:
+                weights: np.ndarray, budget: float) -> np.ndarray:
     """Joint bisection to the common fairness level, then water-fill; with
     unequal weights the greedy fill is not exact (DAGs step by different
     ratio increments), so the recursive bottleneck solver runs instead."""
@@ -305,12 +322,21 @@ class SlotSurfaceCache:
     ``hits`` (reuses)."""
 
     def __init__(self, *, allocator: str = "mba", step: float = 10.0,
-                 max_rate: float = 1e4):
+                 max_rate: float = 1e4,
+                 surface_class: Optional[VmClass] = None):
         self.allocator = allocator
         self.step = float(step)
         self.max_rate = float(max_rate)
+        #: when set, every plain :meth:`surface`/:meth:`row` is computed at
+        #: this class's speed/mem_per_slot — the online controller's way of
+        #: running a whole cache on one non-unit VM family (the incremental
+        #: replanner reads ``row()`` directly)
+        self.surface_class = surface_class
         self.grid = step * np.arange(1, int(max_rate / step) + 1)
         self._rows: Dict[str, np.ndarray] = {}
+        #: per-class rows keyed ``(name, speed, mem_per_slot)`` — unit
+        #: classes share the plain row in ``_rows``
+        self._class_rows: Dict[Tuple[str, float, float], np.ndarray] = {}
         self._prints: Dict[str, Tuple] = {}
         self.stats = {"batch_passes": 0, "hits": 0}
 
@@ -337,8 +363,11 @@ class SlotSurfaceCache:
         row = self._rows.get(name)
         if row is None:
             self.stats["batch_passes"] += 1
+            sc = self.surface_class
             row = batch_slots(dag, self.grid, models, self.allocator,
-                              clip_unsupportable=True)
+                              clip_unsupportable=True,
+                              speed=sc.speed if sc else 1.0,
+                              mem_per_slot=sc.mem_per_slot if sc else 1.0)
             self._rows[name] = row
             self._prints[name] = self._fingerprint(dag)
         else:
@@ -346,6 +375,33 @@ class SlotSurfaceCache:
                 raise ValueError(
                     f"surface cache holds a structurally different DAG "
                     f"under the name {name!r}; drop() it first")
+            self.stats["hits"] += 1
+        return row
+
+    def class_surface(self, name: str, dag: Dataflow, models: ModelLibrary,
+                      vm_class: VmClass) -> np.ndarray:
+        """The slot row for ``name`` on a specific VM class: computed at the
+        class's slot speed (effective per-thread rate) and ``mem_per_slot``,
+        cached per ``(dag, speed, mem_per_slot)``.  A unit class shares the
+        plain :meth:`surface` row, so homogeneous baselines stay on the
+        bit-identical path."""
+        if vm_class.speed == 1.0 and vm_class.mem_per_slot == 1.0:
+            return self.surface(name, dag, models)
+        key = (name, float(vm_class.speed), float(vm_class.mem_per_slot))
+        row = self._class_rows.get(key)
+        if row is None:
+            fp = self._fingerprint(dag)
+            if name in self._prints and self._prints[name] != fp:
+                raise ValueError(
+                    f"surface cache holds a structurally different DAG "
+                    f"under the name {name!r}; drop() it first")
+            self.stats["batch_passes"] += 1
+            row = batch_slots(dag, self.grid, models, self.allocator,
+                              clip_unsupportable=True, speed=vm_class.speed,
+                              mem_per_slot=vm_class.mem_per_slot)
+            self._class_rows[key] = row
+            self._prints.setdefault(name, fp)
+        else:
             self.stats["hits"] += 1
         return row
 
@@ -358,27 +414,29 @@ class SlotSurfaceCache:
         return list(self._rows)
 
     def drop(self, name: str) -> None:
-        """Forget a departed DAG's surface."""
+        """Forget a departed DAG's surface (class rows included)."""
         self._rows.pop(name, None)
         self._prints.pop(name, None)
+        for key in [k for k in self._class_rows if k[0] == name]:
+            del self._class_rows[key]
 
 
 def _caps_for(grid: np.ndarray, slots: np.ndarray, names: Sequence[str],
-              budget_slots: int,
+              budget_slots: Union[int, float],
               max_rates: Optional[Mapping[str, float]] = None,
-              *, floor_check: bool = True) -> np.ndarray:
+              *, floor_check: bool = True, unit: str = "slots") -> np.ndarray:
     """Per-DAG feasible-prefix lengths under ``budget_slots``, clamped by
     each DAG's offered-load ceiling (``max_rates``, t/s).  With
     ``floor_check`` a DAG that cannot fit the whole budget even at the
     grid's first rate raises :class:`UnsupportableDagError` — a demand
     ceiling of zero, by contrast, is a legitimate throttle and never
-    raises."""
+    raises.  ``min_cost`` passes its $/hour surface with ``unit="$/h"``."""
     caps = np.empty(len(names), dtype=int)
     for d, name in enumerate(names):
         cap = prefix_feasible_count(slots[d] <= budget_slots)
         if cap == 0 and floor_check:
             raise UnsupportableDagError(name, float(grid[0]),
-                                        int(budget_slots))
+                                        budget_slots, unit)
         demand = (max_rates or {}).get(name)
         if demand is not None and np.isfinite(demand):
             cap = min(cap, int(np.searchsorted(grid, demand * (1 + 1e-12),
@@ -389,10 +447,12 @@ def _caps_for(grid: np.ndarray, slots: np.ndarray, names: Sequence[str],
 
 def _select_rates(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
                   weights: np.ndarray, prio: np.ndarray, objective: str,
-                  budget_slots: int) -> np.ndarray:
+                  budget_slots: Union[int, float]) -> np.ndarray:
     """Joint per-DAG grid indices under ``objective`` — the pure rate
     selection shared by :func:`plan_fleet` and :func:`replan_incremental`
-    (identical inputs give identical rates by construction)."""
+    (identical inputs give identical rates by construction).  For
+    ``min_cost`` the surface/budget are $/hour and weights compose as in
+    ``weighted``."""
     D = len(weights)
     if objective == "priority":
         idx = np.full(D, -1, dtype=int)
@@ -406,7 +466,7 @@ def _select_rates(grid: np.ndarray, slots: np.ndarray, caps: np.ndarray,
             idx[tier] = tier_idx
             residual -= _cost(slots[tier], tier_idx)
         return idx
-    use_w = weights if objective == "weighted" else np.ones(D)
+    use_w = weights if objective in ("weighted", "min_cost") else np.ones(D)
     return _plan_rates(grid, slots, caps, use_w, budget_slots)
 
 
@@ -438,6 +498,11 @@ def replan_incremental(cache: SlotSurfaceCache, names: Sequence[str], *,
     pin."""
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown fleet objective {objective!r}")
+    if objective == "min_cost":
+        raise ValueError(
+            "min_cost is a plan_fleet-only objective (it needs per-class "
+            "cost surfaces); the online controller sizes cost-aware pools "
+            "with self_size=True instead")
     if budget_slots <= 0:
         raise ValueError("budget_slots must be positive")
     if not names:
@@ -481,10 +546,19 @@ class FleetEntry:
     schedule: Optional[Schedule]           # None when unmapped / omega=0
     prediction: Optional[ResourcePrediction]  # §8.5.2 at the planned rate
     group_index: Optional[GroupIndex] = None  # flat view, plan's policy
+    #: min_cost only: the VM class this DAG's pool draws from and the
+    #: surface's $/hour estimate at the planned rate
+    vm_class: str = ""
+    est_cost_per_hour: float = 0.0
 
     @property
     def acquired_slots(self) -> int:
         return self.schedule.acquired_slots if self.schedule else 0
+
+    @property
+    def cost_per_hour(self) -> float:
+        """Actual $/hour of this DAG's acquired pool (0 when unmapped)."""
+        return pool_cost_per_hour(self.schedule.vms) if self.schedule else 0.0
 
 
 @dataclasses.dataclass
@@ -492,17 +566,30 @@ class FleetPlan:
     """Joint plan for a fleet of DAGs sharing one cluster slot budget."""
 
     objective: str
-    budget_slots: int
+    budget_slots: Optional[int]           # None under min_cost ($ budget)
     grid: np.ndarray                      # (K,) shared rate grid
     slots_matrix: np.ndarray              # (D, K) slot estimates per DAG
     entries: Dict[str, FleetEntry]        # insertion order = input order
     pool: List[VM]                        # every VM acquired for the fleet
     overflow_slots: int                   # acquired slots beyond the budget
     policy: RoutingPolicy                 # routing the predictions assume
+    #: min_cost only: the $ budget, the (D, K) cheapest-class $/hour
+    #: surface, the (D, K) winning class index per cell, and the classes
+    #: the indices refer to
+    budget_dollars: Optional[float] = None
+    cost_matrix: Optional[np.ndarray] = None
+    class_matrix: Optional[np.ndarray] = None
+    vm_classes: Tuple[VmClass, ...] = ()
 
     @property
     def total_estimated_slots(self) -> int:
         return sum(e.estimated_slots for e in self.entries.values())
+
+    @property
+    def cost_per_hour(self) -> float:
+        """Actual $/hour of the whole acquired pool (§7.1 pricing, class
+        prices when the VMs carry them)."""
+        return pool_cost_per_hour(self.pool)
 
     @property
     def total_acquired_slots(self) -> int:
@@ -540,8 +627,12 @@ class FleetPlan:
             running, key=lambda e: (e.priority, -e.omega, e.name))]
 
     def describe(self) -> str:
-        lines = [f"FleetPlan[{self.objective}] budget={self.budget_slots} "
-                 f"slots, {len(self.entries)} DAGs, "
+        budget = (f"budget={self.budget_slots} slots"
+                  if self.budget_slots is not None
+                  else f"budget=${self.budget_dollars:g}/h "
+                       f"(${self.cost_per_hour:.3f}/h acquired)")
+        lines = [f"FleetPlan[{self.objective}] {budget}, "
+                 f"{len(self.entries)} DAGs, "
                  f"est {self.total_estimated_slots} / "
                  f"acq {self.total_acquired_slots} slots "
                  f"(+{self.overflow_slots} overflow)"]
@@ -578,14 +669,15 @@ def _models_for(models: ModelsArg, name: str) -> ModelLibrary:
     return models[name]
 
 
-def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
+def plan_fleet(dags, models: ModelsArg, *, budget_slots: Optional[int] = None,
+               budget_dollars: Optional[float] = None,
                objective: str = "max_min",
                weights: Optional[Mapping[str, float]] = None,
                priorities: Optional[Mapping[str, int]] = None,
                max_rates: Optional[Mapping[str, float]] = None,
                allocator: str = "mba", mapper: Optional[str] = "sam",
                step: float = 10.0, max_rate: float = 1e4,
-               vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+               vm_sizes: VmSizesArg = DEFAULT_VM_SIZES,
                policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
                refine_search: bool = False,
                search_opts: Optional[Dict] = None,
@@ -606,6 +698,16 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
     optimality tests.  A DAG that cannot fit ``budget_slots`` even at the
     grid's floor rate raises :class:`UnsupportableDagError` (a *contended*
     zero rate under budget pressure stays a normal plan entry).
+
+    ``vm_sizes`` also accepts :class:`~repro.core.mapping.VmClass` objects
+    or a registered family name.  Slot-budget objectives require a common
+    slot speed and ``mem_per_slot`` across classes (their single surface is
+    computed class-aware); ``objective="min_cost"`` instead takes a
+    ``budget_dollars`` $/hour budget (``budget_slots`` must be omitted),
+    prices every (dag, rate) cell at its cheapest covering class — one
+    speed/memory-aware surface per class — and water-fills dollars, so
+    classes may freely mix speeds, prices, and memory shapes; each planned
+    DAG acquires its pool from its winning class.
 
     ``surface_cache`` reuses / persists the per-DAG slot surfaces (its
     allocator and grid must match this call); cached DAGs skip their
@@ -631,8 +733,19 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown fleet objective {objective!r}")
-    if budget_slots <= 0:
-        raise ValueError("budget_slots must be positive")
+    min_cost = objective == "min_cost"
+    if min_cost:
+        if budget_dollars is None or budget_dollars <= 0:
+            raise ValueError("min_cost needs a positive budget_dollars")
+        if budget_slots is not None:
+            raise ValueError("min_cost budgets dollars, not slots; omit "
+                             "budget_slots")
+    else:
+        if budget_dollars is not None:
+            raise ValueError("budget_dollars applies only to "
+                             "objective='min_cost'")
+        if budget_slots is None or budget_slots <= 0:
+            raise ValueError("budget_slots must be positive")
     dag_map = _normalize_dags(dags)
     names = list(dag_map)
     D = len(names)
@@ -650,8 +763,29 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
         counters.setdefault("search_candidates", 0)
         counters.setdefault("search_improved", 0)
 
-    # 1. the whole (dag x rate) slot surface, one array pass per DAG —
-    # skipped per DAG when a surface cache already holds its row
+    # resolve the class view of vm_sizes; plain int sizes under a slot
+    # budget stay on the anonymous legacy path (classes=None), which is the
+    # bit-identical homogeneous baseline
+    has_classes = isinstance(vm_sizes, str) \
+        or any(isinstance(s, VmClass) for s in vm_sizes)
+    classes = resolve_vm_classes(vm_sizes) if (min_cost or has_classes) \
+        else None
+    surf_class: Optional[VmClass] = None
+    if classes is not None and not min_cost:
+        speed = vm_sizes_speed(vm_sizes)    # raises on mixed speeds
+        mems = {c.mem_per_slot for c in classes}
+        if len(mems) > 1:
+            raise ValueError("slot-budget objectives need one mem_per_slot "
+                             "across classes; use objective='min_cost' for "
+                             "per-class surfaces")
+        mem = mems.pop()
+        if speed != 1.0 or mem != 1.0:
+            surf_class = VmClass("_surface", 1, speed=speed,
+                                 mem_per_slot=mem)
+
+    # 1. the whole (dag x rate) slot surface, one array pass per DAG (and,
+    # under min_cost, per class) — skipped per row when a surface cache
+    # already holds it
     if surface_cache is not None:
         if surface_cache.allocator != allocator:
             raise ValueError(
@@ -661,27 +795,58 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
             raise ValueError("surface cache grid does not match "
                              "plan_fleet step/max_rate")
         grid = surface_cache.grid
-        passes0 = surface_cache.stats["batch_passes"]
-        slots = np.stack([surface_cache.surface(n, dag_map[n],
-                                                _models_for(models, n))
-                          for n in names])
-        counters["batch_passes"] += \
-            surface_cache.stats["batch_passes"] - passes0
     else:
         grid = step * np.arange(1, int(max_rate / step) + 1)
-        slots = np.empty((D, len(grid)), dtype=np.int64)
-        for d, n in enumerate(names):
-            counters["batch_passes"] += 1
-            slots[d] = batch_slots(dag_map[n], grid, _models_for(models, n),
-                                   allocator, clip_unsupportable=True)
-    caps = _caps_for(grid, slots, names, budget_slots, max_rates)
 
-    # 2. joint rate selection
-    idx = _select_rates(grid, slots, caps, w, prio, objective, budget_slots)
+    def _surface_row(n: str, c: Optional[VmClass]) -> np.ndarray:
+        lib = _models_for(models, n)
+        if surface_cache is not None:
+            passes0 = surface_cache.stats["batch_passes"]
+            row = (surface_cache.class_surface(n, dag_map[n], lib, c)
+                   if c is not None
+                   else surface_cache.surface(n, dag_map[n], lib))
+            counters["batch_passes"] += \
+                surface_cache.stats["batch_passes"] - passes0
+            return row
+        counters["batch_passes"] += 1
+        return batch_slots(dag_map[n], grid, lib, allocator,
+                           clip_unsupportable=True,
+                           speed=c.speed if c else 1.0,
+                           mem_per_slot=c.mem_per_slot if c else 1.0)
+
+    cost_matrix = class_matrix = None
+    if min_cost:
+        # (C, D, K) per-class slot surfaces -> $/hour per cell: VMs needed
+        # (ceil) x class price; clipped-unsupportable cells are infinitely
+        # expensive so no dollar budget ever fits them
+        class_rows = np.stack([[_surface_row(n, c) for n in names]
+                               for c in classes])
+        costs = np.empty(class_rows.shape, dtype=float)
+        for ci, c in enumerate(classes):
+            n_vms = -(-class_rows[ci] // c.slots)
+            costs[ci] = n_vms * c.cost_per_hour
+        costs[class_rows >= 2 ** 61] = np.inf
+        cost_matrix = np.min(costs, axis=0)
+        class_matrix = np.argmin(costs, axis=0)   # ties -> first class
+        slots = np.take_along_axis(np.moveaxis(class_rows, 0, -1),
+                                   class_matrix[..., None], axis=-1)[..., 0]
+        budget: Union[int, float] = float(budget_dollars)
+        caps = _caps_for(grid, cost_matrix, names, budget, max_rates,
+                         unit="$/h")
+        surface = cost_matrix
+    else:
+        slots = np.stack([_surface_row(n, surf_class) for n in names])
+        budget = budget_slots
+        caps = _caps_for(grid, slots, names, budget_slots, max_rates)
+        surface = slots
+
+    # 2. joint rate selection (on the $/hour surface under min_cost)
+    idx = _select_rates(grid, surface, caps, w, prio, objective, budget)
 
     # 3. map each planned DAG onto its share of one common VM pool: §7.1
-    # acquisition per DAG (D3/D2/D1 sizes cover rho exactly), fleet-unique
-    # VM ids, and the §8.4 +1-slot retry on mapper fragmentation
+    # acquisition per DAG (D3/D2/D1 sizes cover rho exactly; under min_cost
+    # each DAG acquires from its winning class), fleet-unique VM ids, and
+    # the §8.4 +1-slot retry on mapper fragmentation
     pool: List[VM] = []
     next_id = 0
     entries: Dict[str, FleetEntry] = {}
@@ -696,8 +861,11 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
             continue
         omega = float(grid[idx[d]])
         rho = int(slots[d, idx[d]])
-        subset = [VM(next_id + i, vm.num_slots, rack=vm.rack)
-                  for i, vm in enumerate(acquire_vms(rho, vm_sizes))]
+        acq_sizes: VmSizesArg = vm_sizes
+        if min_cost:
+            acq_sizes = (classes[int(class_matrix[d, idx[d]])],)
+        subset = [dataclasses.replace(vm, id=next_id + i)
+                  for i, vm in enumerate(acquire_vms(rho, acq_sizes))]
         next_id += len(subset)
         lib = _models_for(models, name)
         counters["allocator_calls"] += 1
@@ -711,7 +879,8 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
         schedules[name] = sched
         next_id = max(vm.id for vm in sched.vms) + 1
         pool.extend(sched.vms)
-    overflow = max(0, sum(vm.num_slots for vm in pool) - budget_slots)
+    overflow = (max(0, sum(vm.num_slots for vm in pool) - budget_slots)
+                if budget_slots is not None else 0)
 
     # 4. per-DAG §8.5.2 predictions at the planned rates (sweep predictor)
     for d, name in enumerate(names):
@@ -724,14 +893,22 @@ def plan_fleet(dags, models: ModelsArg, *, budget_slots: int,
                                    policy)
             prediction = predict_resources_sweep(
                 gi, [omega], mapping=sched.mapping).at(0)
+        vm_class = est_cost = None
+        if min_cost and idx[d] >= 0:
+            vm_class = classes[int(class_matrix[d, idx[d]])].name
+            est_cost = float(cost_matrix[d, idx[d]])
         entries[name] = FleetEntry(
             name=name, dag=dag_map[name], weight=float(w[d]),
             priority=int(prio[d]), omega=omega, grid_index=int(idx[d]),
             estimated_slots=int(slots[d, idx[d]]) if idx[d] >= 0 else 0,
-            schedule=sched, prediction=prediction, group_index=gi)
+            schedule=sched, prediction=prediction, group_index=gi,
+            vm_class=vm_class or "", est_cost_per_hour=est_cost or 0.0)
     plan_obj = FleetPlan(objective=objective, budget_slots=budget_slots,
                          grid=grid, slots_matrix=slots, entries=entries,
-                         pool=pool, overflow_slots=overflow, policy=policy)
+                         pool=pool, overflow_slots=overflow, policy=policy,
+                         budget_dollars=budget_dollars,
+                         cost_matrix=cost_matrix, class_matrix=class_matrix,
+                         vm_classes=classes or ())
     if resolve_validate(validate):
         from repro.analysis.verify import verify_fleet_plan
         raise_if_errors(verify_fleet_plan(plan_obj, models), "plan_fleet")

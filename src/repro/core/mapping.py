@@ -15,7 +15,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Dict, Iterable, List, Mapping as TMapping, Optional, Sequence, Tuple
+from typing import (Dict, Iterable, List, Mapping as TMapping, Optional,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -52,14 +53,161 @@ class SlotId:
         return f"s{self.vm}.{self.slot}"
 
 
+#: Azure D-series pricing per slot-hour (paper §7.1: price is proportional
+#: to slots — $0.098/slot/h across D1..D4).
+PRICE_PER_SLOT_HOUR = 0.098
+
+
+@dataclasses.dataclass(frozen=True)
+class VmClass:
+    """A typed VM offering (§7.1 generalized): ``slots`` homogeneous slots
+    whose threads each serve ``speed``× the profiled §6 service rate, priced
+    at ``cost_per_hour`` dollars (default: the paper's slot-proportional
+    D-series price) with ``mem_per_slot`` memory quanta per slot."""
+
+    name: str
+    slots: int
+    speed: float = 1.0
+    cost_per_hour: Optional[float] = None
+    mem_per_slot: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.slots <= 0:
+            raise ValueError(f"VmClass {self.name!r}: slots must be positive")
+        if not (math.isfinite(self.speed) and self.speed > 0):
+            raise ValueError(f"VmClass {self.name!r}: speed must be positive "
+                             "and finite")
+        if self.cost_per_hour is None:
+            object.__setattr__(self, "cost_per_hour",
+                               self.slots * PRICE_PER_SLOT_HOUR)
+        if not (math.isfinite(self.cost_per_hour)
+                and self.cost_per_hour >= 0):
+            raise ValueError(f"VmClass {self.name!r}: cost_per_hour must be "
+                             ">= 0 and finite")
+        if not (math.isfinite(self.mem_per_slot) and self.mem_per_slot > 0):
+            raise ValueError(f"VmClass {self.name!r}: mem_per_slot must be "
+                             "positive and finite")
+
+
+def vm_classes_from_sizes(sizes: Sequence[int], *, speed: float = 1.0,
+                          price_per_slot_hour: float = PRICE_PER_SLOT_HOUR,
+                          mem_per_slot: float = 1.0,
+                          prefix: str = "d") -> Tuple[VmClass, ...]:
+    """Unit-speed, slot-proportionally-priced classes for integer sizes —
+    the homogeneous baseline every heterogeneous path must reproduce
+    bit-identically."""
+    return tuple(
+        VmClass(f"{prefix}{s}", int(s), speed=speed,
+                cost_per_hour=int(s) * price_per_slot_hour,
+                mem_per_slot=mem_per_slot)
+        for s in sorted({int(s) for s in sizes}, reverse=True))
+
+
+#: Named class families used by the repo's planners: the paper's Azure
+#: D-series (D3=4/D2=2/D1=1 slots), the serving planner's TPU hosts, and
+#: the data-pipeline hosts (8-core machines down to singles).
+VM_CLASS_FAMILIES: Dict[str, Tuple[VmClass, ...]] = {
+    "azure-d": vm_classes_from_sizes((4, 2, 1)),
+    "tpu-host": vm_classes_from_sizes((4, 2, 1), prefix="host"),
+    "pipeline-host": vm_classes_from_sizes((8, 4, 2, 1), prefix="host"),
+}
+
+
+def vm_class_family(name: str) -> Tuple[VmClass, ...]:
+    """A registered class family by name (``ValueError`` on unknown)."""
+    try:
+        return VM_CLASS_FAMILIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown VM class family {name!r}; registered: "
+            f"{sorted(VM_CLASS_FAMILIES)}") from None
+
+
+#: A ``vm_sizes`` argument anywhere in the planning stack: plain int slot
+#: counts (the §7.1 baseline), :class:`VmClass` objects, or a registered
+#: family name.
+VmSizesArg = Union[str, Sequence[int], Sequence[VmClass]]
+
+
+def resolve_vm_classes(vm_sizes: VmSizesArg) -> Tuple[VmClass, ...]:
+    """Normalize a ``vm_sizes`` argument into :class:`VmClass` objects.
+    Plain ints become anonymous unit-speed classes at the default price."""
+    if isinstance(vm_sizes, str):
+        return vm_class_family(vm_sizes)
+    out: List[VmClass] = []
+    seen = set()
+    for s in vm_sizes:
+        c = s if isinstance(s, VmClass) else VmClass(f"d{int(s)}", int(s))
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        out.append(c)
+    if not out:
+        raise ValueError("vm_sizes must name at least one class/size")
+    return tuple(out)
+
+
+def vm_sizes_speed(vm_sizes: VmSizesArg) -> float:
+    """Common slot speed of a ``vm_sizes`` spec (1.0 for plain int sizes).
+    Mixed speeds raise: one acquisition pools one speed — mixed-speed
+    fleets plan per class (the ``min_cost`` objective)."""
+    if not isinstance(vm_sizes, str) \
+            and not any(isinstance(s, VmClass) for s in vm_sizes):
+        return 1.0
+    speeds = {c.speed for c in resolve_vm_classes(vm_sizes)}
+    if len(speeds) > 1:
+        raise ValueError(f"mixed slot speeds {sorted(speeds)} in one pool; "
+                         "plan per class instead")
+    return speeds.pop()
+
+
 @dataclasses.dataclass
 class VM:
     id: int
     num_slots: int
     rack: int = 0
+    #: heterogeneity metadata — defaults reproduce the homogeneous unit-slot
+    #: model, so ``VM(id, slots, rack)`` construction and equality are
+    #: unchanged for every pre-existing call site
+    speed: float = 1.0
+    vm_class: str = ""
+    cost_per_hour: Optional[float] = None
+    mem_per_slot: float = 1.0
+
+    @property
+    def price_per_hour(self) -> float:
+        if self.cost_per_hour is not None:
+            return self.cost_per_hour
+        return self.num_slots * PRICE_PER_SLOT_HOUR
 
     def slot_ids(self) -> List[SlotId]:
         return [SlotId(self.id, l) for l in range(self.num_slots)]
+
+
+def pool_cost_per_hour(vms: Sequence[VM]) -> float:
+    """Total $/hour of a VM pool (§7.1 pricing; class costs when tagged)."""
+    return float(sum(vm.price_per_hour for vm in vms))
+
+
+def pool_speed(vms: Sequence[VM], *, default: float = 1.0) -> float:
+    """The pool's common slot speed (``default`` for an empty pool); a
+    mixed-speed pool raises — allocation semantics are per-speed."""
+    speeds = {vm.speed for vm in vms}
+    if not speeds:
+        return default
+    if len(speeds) > 1:
+        raise ValueError(f"mixed-speed VM pool {sorted(speeds)}")
+    return speeds.pop()
+
+
+def unit_vm_like(vm_id: int, pool: Sequence[VM]) -> VM:
+    """A fresh 1-slot VM matching the pool's speed/memory shape — the §8.4
+    +1-slot retry on a heterogeneous pool must not change its class
+    semantics.  An empty pool gets the plain unit VM."""
+    if not pool:
+        return VM(vm_id, 1)
+    ref = pool[0]
+    return VM(vm_id, 1, speed=ref.speed, mem_per_slot=ref.mem_per_slot)
 
 
 def nw_dist(ref: Optional[VM], cand: VM) -> float:
@@ -80,24 +228,103 @@ def nw_dist(ref: Optional[VM], cand: VM) -> float:
 DEFAULT_VM_SIZES: Tuple[int, ...] = (4, 2, 1)
 
 
-def acquire_vms(rho: int, vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
-                *, rack_size: int = 32) -> List[VM]:
-    """Acquire VMs covering ``rho`` slots: as many largest-size VMs as fit,
-    then the smallest size that covers the remainder (§7.1).  ``rack_size``
-    VMs share a rack (all in one rack for the paper's PaaS setting when the
-    count is small)."""
-    if rho <= 0:
-        raise ValueError("rho must be positive")
-    sizes = sorted(set(vm_sizes), reverse=True)
+def _greedy_counts(rho: int, sizes: Sequence[int]) -> List[int]:
+    """§7.1 greedy slot counts: as many largest-size VMs as fit, then the
+    smallest size that covers the remainder."""
+    sizes = sorted(set(sizes), reverse=True)
     largest = sizes[0]
-    counts: List[int] = []
     n_large, rem = divmod(rho, largest)
     counts = [largest] * n_large
     if rem:
         fitting = [s for s in sorted(sizes) if s >= rem]
         counts.append(fitting[0] if fitting else largest)
-    vms = [VM(i, s, rack=i // rack_size) for i, s in enumerate(counts)]
-    return vms
+    return counts
+
+
+def _proportional_price(classes: Sequence[VmClass]) -> Optional[float]:
+    """The common per-slot $/hour when every class is priced proportionally
+    to its slots, else ``None`` (→ genuinely heterogeneous costs)."""
+    per_slot = classes[0].cost_per_hour / classes[0].slots
+    for c in classes:
+        if not math.isclose(c.cost_per_hour, per_slot * c.slots,
+                            rel_tol=1e-9, abs_tol=1e-12):
+            return None
+    return per_slot
+
+
+def _acquire_min_cost(rho: int, classes: Sequence[VmClass]) -> List[VmClass]:
+    """Exact min-cost covering multiset over heterogeneous-cost classes:
+    pseudo-polynomial DP over remaining slots.  Ties prefer fewer VMs, then
+    fewer total slots; reconstruction is deterministic (larger classes
+    first)."""
+    order = sorted(classes, key=lambda c: (-c.slots, c.name))
+
+    def better(a: Tuple[float, int, int], b: Tuple[float, int, int]) -> bool:
+        # float cost sums of equal-value paths can differ by ulps depending
+        # on addition order; compare with a tolerance so the (n_vms,
+        # total_slots) tie-breaks decide true ties instead of the ulps
+        if a[0] < b[0] - 1e-9:
+            return True
+        if a[0] > b[0] + 1e-9:
+            return False
+        return (a[1], a[2]) < (b[1], b[2])
+
+    # best[r] = (cost, n_vms, total_slots) to cover r remaining slots
+    best: List[Optional[Tuple[float, int, int]]] = [(0.0, 0, 0)]
+    choice: List[int] = [-1]
+    for r in range(1, rho + 1):
+        cell: Optional[Tuple[float, int, int]] = None
+        pick = -1
+        for ci, c in enumerate(order):
+            prev = best[max(0, r - c.slots)]
+            cand = (prev[0] + c.cost_per_hour, prev[1] + 1, prev[2] + c.slots)
+            if cell is None or better(cand, cell):
+                cell, pick = cand, ci
+        best.append(cell)
+        choice.append(pick)
+    chosen: List[VmClass] = []
+    r = rho
+    while r > 0:
+        c = order[choice[r]]
+        chosen.append(c)
+        r = max(0, r - c.slots)
+    chosen.sort(key=lambda c: (-c.slots, c.name))
+    return chosen
+
+
+def acquire_vms(rho: int, vm_sizes: VmSizesArg = DEFAULT_VM_SIZES,
+                *, rack_size: int = 32) -> List[VM]:
+    """Acquire VMs covering ``rho`` slots (§7.1, generalized to typed
+    classes).  Plain int sizes — and class families whose prices are
+    slot-proportional — use the paper's greedy (largest size first, then
+    the smallest size covering the remainder) and reproduce the unit-slot
+    pools bit-identically.  Genuinely heterogeneous costs switch to an
+    exact min-cost covering DP.  ``rack_size`` VMs share a rack."""
+    if rho <= 0:
+        raise ValueError("rho must be positive")
+    if not isinstance(vm_sizes, str) \
+            and not any(isinstance(s, VmClass) for s in vm_sizes):
+        # Legacy §7.1 path: anonymous unit classes, bit-identical pools.
+        counts = _greedy_counts(rho, [int(s) for s in vm_sizes])
+        return [VM(i, s, rack=i // rack_size) for i, s in enumerate(counts)]
+    classes = resolve_vm_classes(vm_sizes)
+    if len({c.speed for c in classes}) > 1:
+        raise ValueError("acquire_vms pools one speed per acquisition; "
+                         "mixed-speed fleets plan per class (min_cost)")
+    if _proportional_price(classes) is not None:
+        # Uniform $/slot: cost-minimal = slot-minimal, so the §7.1 greedy
+        # is cost-optimal and keeps pool shapes identical to the baseline.
+        by_slots: Dict[int, VmClass] = {}
+        for c in classes:
+            by_slots.setdefault(c.slots, c)
+        counts = _greedy_counts(rho, list(by_slots))
+        chosen = [by_slots[s] for s in counts]
+    else:
+        chosen = _acquire_min_cost(rho, classes)
+    return [VM(i, c.slots, rack=i // rack_size, speed=c.speed,
+               vm_class=c.name, cost_per_hour=c.cost_per_hour,
+               mem_per_slot=c.mem_per_slot)
+            for i, c in enumerate(chosen)]
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +343,7 @@ class Mapping:
         for vm in self.vms:
             for s in vm.slot_ids():
                 self.slot_cpu[s] = 1.0
-                self.slot_mem[s] = 1.0
+                self.slot_mem[s] = vm.mem_per_slot
         # slot → threads index kept in sync by ``assign``: slot lookups are
         # O(|slot|) instead of O(R) scans over the whole assignment (SAM's
         # ``next_full_slot`` probes every slot, which used to be O(R·S)).
@@ -219,7 +446,7 @@ def map_rsm(dag: Dataflow, alloc: Allocation, vms: Sequence[VM],
     # the last-mapped VM's network term, so the *order* is recomputed per
     # thread, but as one O(V) array pass.
     avail_cpu = np.array([vm.num_slots * 1.0 for vm in vms])
-    avail_mem = np.array([vm.num_slots * 1.0 for vm in vms])
+    avail_mem = np.array([vm.num_slots * vm.mem_per_slot for vm in vms])
     vm_ids = np.array([vm.id for vm in vms], dtype=int)
     vm_racks = np.array([vm.rack for vm in vms], dtype=int)
     remaining: Dict[str, int] = {n: ta.threads for n, ta in alloc.tasks.items()}

@@ -65,6 +65,17 @@ per-DAG :class:`~repro.core.scheduler.Schedule`\\ s:
   the incremental path moves only the delta
   (``benchmarks/bench_online.py`` quantifies both).
 
+Self-sizing fleets
+------------------
+``FleetController(self_size=True)`` drops the externally-owned slot budget.
+Every arrival must pin a demand ceiling (``max_rate``); after each event the
+controller re-sizes its own budget to exactly the slots needed to serve every
+live DAG at its ceiling — acquiring VMs from its class family
+(:class:`~repro.core.mapping.VmClass`) on growth and releasing emptied VMs on
+departs and rate drops, so fleet $/hour tracks demand in both directions.
+Each :class:`ControllerRecord` logs the acquired pool's
+``fleet_cost_per_hour``, giving the dollar timeline of an elastic fleet.
+
 Between events :meth:`FleetController.cosimulate` closes the loop
 empirically: the live fleet co-simulates in ONE batched
 ``SweepBatch``/:func:`~repro.core.fleet.simulate_fleet` pass (reusing each
@@ -90,7 +101,9 @@ from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
                     ModelsArg, SlotSurfaceCache, UnsupportableDagError,
                     _models_for, replan_incremental, simulate_fleet)
 from .mapping import (DEFAULT_VM_SIZES, InsufficientResourcesError,
-                      Mapping as ThreadMapping, VM, acquire_vms)
+                      Mapping as ThreadMapping, VM, VmClass, VmSizesArg,
+                      acquire_vms, pool_cost_per_hour, resolve_vm_classes,
+                      unit_vm_like, vm_sizes_speed)
 from .predictor import (build_group_index, predict_max_rate_gi,
                         predict_resources_sweep)
 from .routing import RoutingPolicy
@@ -173,6 +186,7 @@ class ControllerRecord:
     batch_passes: int                # new slot surfaces computed (arrivals)
     replan_latency_s: float          # wall time of the whole apply()
     stable: Optional[Dict[str, bool]] = None   # co-sim verdict per DAG
+    fleet_cost_per_hour: float = 0.0  # $/hour of the acquired pool, post-event
 
     @property
     def kind(self) -> str:
@@ -202,6 +216,7 @@ class ControllerLog:
                 f"moved {r.threads_migrated}/{r.threads_total} threads, "
                 f"{r.slots_moved} slots, {r.batch_passes} surface pass"
                 f"{'es' if r.batch_passes != 1 else ''}, "
+                f"${r.fleet_cost_per_hour:.3f}/h, "
                 f"{r.replan_latency_s * 1e3:.1f} ms{sim}")
         return "\n".join(lines)
 
@@ -228,16 +243,26 @@ class FleetController:
     mappings) — the pure array path used by the parity tests.
     """
 
-    def __init__(self, models: ModelsArg, *, budget_slots: int,
+    def __init__(self, models: ModelsArg, *,
+                 budget_slots: Optional[int] = None,
                  objective: str = "max_min", allocator: str = "mba",
                  mapper: Optional[str] = "sam", step: float = 10.0,
                  max_rate: float = 1e4,
-                 vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+                 vm_sizes: VmSizesArg = DEFAULT_VM_SIZES,
+                 self_size: bool = False,
                  policy: RoutingPolicy = RoutingPolicy.SHUFFLE,
                  warm_start_search: bool = True,
                  search_opts: Optional[Dict] = None,
                  validate: Optional[bool] = None):
-        if budget_slots <= 0:
+        if self_size:
+            if budget_slots is not None:
+                raise ValueError(
+                    "a self-sizing controller owns its budget; "
+                    "do not pass budget_slots")
+        elif budget_slots is None:
+            raise ValueError(
+                "budget_slots is required unless self_size=True")
+        elif budget_slots <= 0:
             raise ValueError("budget_slots must be positive")
         self.models = models
         #: tri-state: True/False force verification per apply(); None
@@ -246,13 +271,31 @@ class FleetController:
         self.objective = objective
         self.allocator = allocator
         self.mapper = mapper
-        self.vm_sizes = tuple(vm_sizes)
+        self.vm_sizes = (vm_sizes if isinstance(vm_sizes, str)
+                         else tuple(vm_sizes))
+        #: acquire-to-demand mode: the controller sizes its own slot budget
+        #: to cover every live DAG's pinned demand ceiling, growing on
+        #: arrivals / rate rises and releasing capacity on departs / drops
+        self.self_size = bool(self_size)
+        # per-DAG pools are single-speed (mapping.acquire_vms enforces it),
+        # so one uniform speed / mem quantum governs the whole controller
+        self._speed = vm_sizes_speed(self.vm_sizes)
+        mems = {c.mem_per_slot for c in resolve_vm_classes(self.vm_sizes)}
+        if len(mems) > 1:
+            raise ValueError(
+                "controller vm_sizes must share one mem_per_slot; "
+                "mixed-memory fleets need plan_fleet(objective='min_cost')")
+        self._mem_per_slot = mems.pop()
         self.policy = policy
-        self.budget_slots = int(budget_slots)
+        self.budget_slots = 1 if self_size else int(budget_slots)
         self.warm_start_search = warm_start_search
         self.search_opts = dict(search_opts or {})
+        surf = None
+        if self._speed != 1.0 or self._mem_per_slot != 1.0:
+            surf = VmClass("_controller", 1, speed=self._speed,
+                           mem_per_slot=self._mem_per_slot)
         self.cache = SlotSurfaceCache(allocator=allocator, step=step,
-                                      max_rate=max_rate)
+                                      max_rate=max_rate, surface_class=surf)
         self.log = ControllerLog()
         self.clock = 0.0
         self._dags: Dict[str, Dataflow] = {}
@@ -302,6 +345,21 @@ class FleetController:
         raises AND leaves the controller state exactly as before.
         """
         t0 = time.perf_counter()
+        if self.self_size:
+            # demand ceilings ARE the budget signal: every live DAG must
+            # keep one pinned, and nobody else hands the controller slots
+            if isinstance(event, VmAdd):
+                raise ValueError(
+                    "VmAdd does not apply to a self-sizing controller "
+                    "(it owns its budget)")
+            if isinstance(event, DagArrive) and event.max_rate is None:
+                raise ValueError(
+                    "a self-sizing controller admits only DAGs with a "
+                    "demand ceiling (max_rate)")
+            if isinstance(event, RateChange) and event.max_rate is None:
+                raise ValueError(
+                    "a self-sizing controller cannot unpin a demand "
+                    "ceiling (RateChange(max_rate=None))")
         prev_clock = self.clock
         self.clock = self.clock if at is None else float(at)
         passes0 = self.cache.stats["batch_passes"]
@@ -340,6 +398,9 @@ class FleetController:
         else:
             raise TypeError(f"unknown fleet event {event!r}")
 
+        if self.self_size:
+            self.budget_slots = self._self_sized_budget()
+
         names = list(self._dags)
         try:
             decisions = replan_incremental(
@@ -350,6 +411,8 @@ class FleetController:
         except UnsupportableDagError:
             if isinstance(event, DagArrive):
                 self._evict(event.name)   # reject: fleet state unchanged
+                if self.self_size:
+                    self.budget_slots = self._self_sized_budget()
                 self.clock = prev_clock
             raise
 
@@ -405,7 +468,8 @@ class FleetController:
                 for e in new_entries.values() if e.schedule),
             slots_moved=slots_moved,
             batch_passes=self.cache.stats["batch_passes"] - passes0,
-            replan_latency_s=time.perf_counter() - t0)
+            replan_latency_s=time.perf_counter() - t0,
+            fleet_cost_per_hour=pool_cost_per_hour(self.pool))
         self.log.records.append(record)
         if resolve_validate(self.validate):
             # O(changed): untouched entries skip their schedule walks
@@ -493,6 +557,25 @@ class FleetController:
         return report
 
     # -- internals -----------------------------------------------------------
+    def _self_sized_budget(self) -> int:
+        """Slots needed to serve every live DAG at its pinned demand
+        ceiling — the acquire-to-demand budget.  Reads only cached surface
+        rows, so it costs a few array probes per DAG; grid cells clipped as
+        unsupportable (the 2**62 sentinel) fall back to the last
+        supportable rate at or below the ceiling."""
+        grid = self.cache.grid
+        total = 0
+        for name in self._dags:
+            row = self.cache.row(name)
+            ceiling = self._max_rates[name]
+            k = int(np.searchsorted(grid, ceiling * (1 + 1e-12),
+                                    side="right")) - 1
+            while k >= 0 and float(row[k]) >= 2.0 ** 61:
+                k -= 1
+            if k >= 0:
+                total += int(row[k])
+        return max(total, 1)
+
     def _evict(self, name: str) -> None:
         self._dags.pop(name, None)
         self._weights.pop(name, None)
@@ -511,8 +594,7 @@ class FleetController:
         have = sum(vm.num_slots for vm in base)
         if est_slots > have:
             fresh = acquire_vms(est_slots - have, self.vm_sizes)
-            base = base + [VM(self._next_vm_id + i, vm.num_slots,
-                              rack=vm.rack)
+            base = base + [dataclasses.replace(vm, id=self._next_vm_id + i)
                            for i, vm in enumerate(fresh)]
             self._next_vm_id += len(fresh)
         search_opts = dict(self.search_opts) or None
@@ -521,7 +603,8 @@ class FleetController:
                 and old_sched is not None):
             # allocate once up front (plan() reuses it below) to check the
             # incumbent mapping still covers the new thread set
-            alloc = ALLOCATORS[self.allocator](self._dags[name], omega, lib)
+            alloc = ALLOCATORS[self.allocator](self._dags[name],
+                                               omega / self._speed, lib)
             same_threads = {n: ta.threads for n, ta in alloc.tasks.items()} \
                 == {n: ta.threads
                     for n, ta in old_sched.allocation.tasks.items()}
@@ -543,7 +626,7 @@ class FleetController:
                             fixed_vms=vms, grow_fixed_vms=False,
                             allocation=alloc, search_opts=search_opts)
             except InsufficientResourcesError:
-                vms = vms + [VM(self._next_vm_id, 1)]
+                vms = vms + [unit_vm_like(self._next_vm_id, vms)]
                 self._next_vm_id += 1
         raise RuntimeError(
             f"mapping {name!r} failed even with {MAX_EXTRA_SLOTS} extra "

@@ -99,7 +99,13 @@ def build_group_index(dag: Dataflow, alloc: Allocation,
                       mapping: ThreadMapping, models: ModelLibrary,
                       policy: RoutingPolicy = RoutingPolicy.SHUFFLE
                       ) -> GroupIndex:
-    """Flatten ``slot_groups`` into contiguous arrays, tasks in topo order."""
+    """Flatten ``slot_groups`` into contiguous arrays, tasks in topo order.
+
+    Heterogeneous pools fold in here once: a group's capacity is the model
+    peak rate ``I_t(q)`` scaled by its slot's VM speed, so every consumer of
+    ``g_cap`` (batch predictor, sweep simulator, rate prover) is speed-aware
+    without further changes.  Unit-speed VMs scale by exactly 1.0."""
+    vm_speed = {vm.id: vm.speed for vm in getattr(mapping, "vms", ())}
     groups = slot_groups(mapping, alloc)
     order = [t.name for t in dag.topo_order()]
     task_of = {name: i for i, name in enumerate(order)}
@@ -129,7 +135,7 @@ def build_group_index(dag: Dataflow, alloc: Allocation,
             g_task.append(row)
             g_slot.append(slot_of[slot])
             g_threads.append(q)
-            g_cap.append(model.I(q))
+            g_cap.append(model.I(q) * vm_speed.get(slot.vm, 1.0))
             g_cpu.append(model.C(q))
             g_mem.append(model.M(q))
             g_frac.append(dist[slot])

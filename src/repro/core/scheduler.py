@@ -16,15 +16,13 @@ import numpy as np
 from .allocation import ALLOCATORS, Allocation, UnsupportableRateError
 from .dag import Dataflow
 from .diagnostics import raise_if_errors, resolve_validate
-from .mapping import (DEFAULT_VM_SIZES, MAPPERS, InsufficientResourcesError,
-                      Mapping, SlotId, VM, acquire_vms)
+from .mapping import (DEFAULT_VM_SIZES, MAPPERS, PRICE_PER_SLOT_HOUR,
+                      InsufficientResourcesError, Mapping, SlotId, VM,
+                      VmSizesArg, acquire_vms, pool_cost_per_hour,
+                      pool_speed, unit_vm_like, vm_sizes_speed)
 from .perfmodel import ModelLibrary
 from .predictor import predict_max_rate, predict_resources
 from .routing import RoutingPolicy
-
-#: Azure D-series pricing per slot-hour (paper §7.1: price is proportional to
-#: slots — $0.098/slot/h across D1..D4).
-PRICE_PER_SLOT_HOUR = 0.098
 
 #: Give up after this many +1-slot retries (a mapper that cannot place with
 #: 4x the estimate is a bug, not fragmentation).
@@ -52,7 +50,19 @@ class Schedule:
 
     @property
     def price_per_hour(self) -> float:
+        """Pool $/hour: class prices when the VMs carry them, the paper's
+        slot-proportional §7.1 price otherwise."""
+        if self.vms:
+            return pool_cost_per_hour(self.vms)
         return self.acquired_slots * PRICE_PER_SLOT_HOUR
+
+    @property
+    def pool_speed(self) -> float:
+        """The pool's common slot speed (1.0 for the unit-slot baseline or
+        when the pool is degenerate/mixed — the verifier flags mixed pools
+        with RES_MIXED_SPEED)."""
+        speeds = {vm.speed for vm in self.vms}
+        return speeds.pop() if len(speeds) == 1 else 1.0
 
     def predicted_rate(self, models: ModelLibrary,
                        policy: RoutingPolicy = RoutingPolicy.SHUFFLE) -> float:
@@ -81,7 +91,7 @@ class Schedule:
 
 def plan(dag: Dataflow, omega: float, models: ModelLibrary,
          *, allocator: str = "mba", mapper: str = "sam",
-         vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+         vm_sizes: VmSizesArg = DEFAULT_VM_SIZES,
          fixed_vms: Optional[Sequence[VM]] = None,
          grow_fixed_vms: bool = False,
          allocation: Optional[Allocation] = None,
@@ -106,10 +116,16 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
     seeds, policy, ...); keys the pipeline owns — pool, allocation,
     allocator, ``vm_sizes`` — are reserved and raise ``ValueError``.
 
+    ``vm_sizes`` also accepts :class:`~repro.core.mapping.VmClass` objects
+    or a registered family name.  On a ``speed=s`` class the allocation is
+    sized at the *effective* rate ``omega / s`` (a thread on a speed-``s``
+    slot serves ``s``× the §6 service rate) while ``Schedule.omega`` keeps
+    the real rate; ``s = 1`` reproduces the unit-slot plans bit-identically.
+
     ``allocation`` skips re-allocating when the caller already holds the
-    allocation for exactly (``dag``, ``omega``, ``allocator``) — e.g. the
-    online controller's warm-start path, which allocates once to compare
-    thread counts against the incumbent.
+    allocation for exactly (``dag``, effective ``omega``, ``allocator``) —
+    e.g. the online controller's warm-start path, which allocates once to
+    compare thread counts against the incumbent.
 
     ``validate`` runs the :mod:`repro.analysis` verifier passes (dag,
     allocation, schedule) on the result and raises
@@ -117,10 +133,14 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
     invariant; ``None`` defers to the process-wide default
     (:func:`repro.core.diagnostics.default_validate`).
     """
-    alloc = allocation if allocation is not None \
-        else ALLOCATORS[allocator](dag, omega, models)
-    rho = alloc.slots
     fixed = fixed_vms is not None
+    speed = pool_speed(fixed_vms, default=1.0) if fixed \
+        else vm_sizes_speed(vm_sizes)
+    # effective rate: omega / 1.0 is bitwise omega, so the unit-slot
+    # baseline allocates identically
+    alloc = allocation if allocation is not None \
+        else ALLOCATORS[allocator](dag, omega / speed, models)
+    rho = alloc.slots
 
     def _checked(sched: Schedule) -> Schedule:
         if resolve_validate(validate):
@@ -169,7 +189,8 @@ def plan(dag: Dataflow, omega: float, models: ModelLibrary,
         except InsufficientResourcesError as err:
             last_err = err
             if fixed:
-                vms = vms + [VM(max((vm.id for vm in vms), default=-1) + 1, 1)]
+                vms = vms + [unit_vm_like(
+                    max((vm.id for vm in vms), default=-1) + 1, vms)]
             else:
                 vms = acquire_vms(rho + extra + 1, vm_sizes)
             continue
@@ -191,8 +212,9 @@ def replan_on_failure(schedule: Schedule, models: ModelLibrary,
     The paper's §2 argument made executable: because allocation is
     model-driven, recovery is ONE deterministic replan — keep the
     allocation (thread counts derive from the models, not the cluster),
-    drop the failed VMs, acquire replacements per §7.1, and re-map.  No
-    incremental trial-and-error convergence.
+    drop the failed VMs, acquire like-for-like replacements (same
+    size/class as each failed VM, not re-packed into default §7.1 sizes),
+    and re-map.  No incremental trial-and-error convergence.
 
     ``keep_survivors`` is the migration-minimal variant the online
     controller uses: instead of re-running the mapper over the surviving
@@ -209,13 +231,14 @@ def replan_on_failure(schedule: Schedule, models: ModelLibrary,
     """
     failed = set(failed_vm_ids)
     survivors = [vm for vm in schedule.vms if vm.id not in failed]
-    lost_slots = sum(vm.num_slots for vm in schedule.vms if vm.id in failed)
-    # acquire replacement capacity (fresh ids beyond the existing ones)
-    replacements = acquire_vms(max(lost_slots, 1)) if lost_slots else []
+    failed_vms = [vm for vm in schedule.vms if vm.id in failed]
+    # replace like for like (fresh ids beyond the existing ones): each failed
+    # VM is cloned size/class/rack-intact, so repairs never silently change
+    # the pool shape the original vm_sizes/classes produced
     next_id = max(max((vm.id for vm in schedule.vms), default=-1) + 1,
                   next_vm_id if next_vm_id is not None else 0)
-    replacements = [VM(next_id + i, vm.num_slots, vm.rack)
-                    for i, vm in enumerate(replacements)]
+    replacements = [dataclasses.replace(vm, id=next_id + i)
+                    for i, vm in enumerate(failed_vms)]
     vms = survivors + replacements
 
     if keep_survivors:
@@ -257,13 +280,14 @@ def replan_on_failure(schedule: Schedule, models: ModelLibrary,
                             search_winner=winner)
         except InsufficientResourcesError as err:
             last_err = err
-            vms = vms + [VM(next_id + len(replacements) + extra, 1)]
+            vms = vms + [unit_vm_like(next_id + len(replacements) + extra,
+                                      vms)]
     raise RuntimeError("replan failed") from last_err
 
 
 def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
                      mapper: str, budget_slots: int,
-                     vm_sizes: Sequence[int] = DEFAULT_VM_SIZES,
+                     vm_sizes: VmSizesArg = DEFAULT_VM_SIZES,
                      step: float = 10.0, max_rate: float = 1e5,
                      method: str = "bisect",
                      stats: Optional[Dict[str, int]] = None) -> float:
@@ -293,12 +317,13 @@ def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
     counters.setdefault("allocator_calls", 0)
     counters.setdefault("mapper_calls", 0)
     counters.setdefault("batch_passes", 0)
+    speed = vm_sizes_speed(vm_sizes)
     vms = acquire_vms(budget_slots, vm_sizes)
 
     def plan_fits(omega: float) -> bool:
         counters["allocator_calls"] += 1
         try:
-            alloc = ALLOCATORS[allocator](dag, omega, models)
+            alloc = ALLOCATORS[allocator](dag, omega / speed, models)
         except UnsupportableRateError:
             # no thread count supports this rate: it cannot fit any budget
             return False
@@ -325,7 +350,8 @@ def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
     grid = step * np.arange(1, int(max_rate / step) + 1)
     counters["batch_passes"] += 1
     rho_ok = batch_slots(dag, grid, models, allocator,
-                         clip_unsupportable=True) <= budget_slots
+                         clip_unsupportable=True,
+                         speed=speed) <= budget_slots
     # The scan stops at the FIRST rate that does not fit: only the leading
     # all-feasible prefix is eligible, even if a later rate fits again.
     n = prefix_feasible_count(rho_ok)
@@ -334,7 +360,7 @@ def max_planned_rate(dag: Dataflow, models: ModelLibrary, *, allocator: str,
 
     def mapper_fits(k: int) -> bool:
         counters["allocator_calls"] += 1
-        alloc = ALLOCATORS[allocator](dag, float(grid[k]), models)
+        alloc = ALLOCATORS[allocator](dag, float(grid[k]) / speed, models)
         counters["mapper_calls"] += 1
         try:
             MAPPERS[mapper](dag, alloc, vms, models)

@@ -21,6 +21,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from ..core.dag import Dataflow
+from ..core.mapping import vm_class_family
 from ..core.perfmodel import ModelLibrary, PerfModel
 from ..core.scheduler import Schedule, plan
 
@@ -129,7 +130,8 @@ def plan_pipeline(docs_per_sec: float, *, models: Optional[ModelLibrary] = None,
     consumption rate."""
     models = models or pipeline_models()
     return plan(pipeline_dag(), docs_per_sec, models,
-                allocator=allocator, mapper=mapper, vm_sizes=(8, 4, 2, 1))
+                allocator=allocator, mapper=mapper,
+                vm_sizes=vm_class_family("pipeline-host"))
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ from typing import Dict, Optional, Tuple
 from ..configs.base import ModelConfig
 from ..core.dag import Dataflow
 from ..core.fleet import FleetPlan, plan_fleet
+from ..core.mapping import vm_class_family
 from ..core.perfmodel import ModelLibrary, ModelPoint, PerfModel
 from ..core.scheduler import Schedule, plan
 from ..distributed.roofline import stage_hbm_fraction, stage_tokens_per_sec
@@ -101,7 +102,7 @@ def plan_serving(cfg: ModelConfig, *, request_rate: float, prompt_len: int,
     dag = serving_dag(gen_len)
     # hosts expose CHIPS_PER_HOST "threads" per slot; VM sizes in host units
     schedule = plan(dag, request_rate, models, allocator=allocator,
-                    mapper=mapper, vm_sizes=(4, 2, 1))
+                    mapper=mapper, vm_sizes=vm_class_family("tpu-host"))
     alloc = schedule.allocation.tasks
     return ServingPlan(
         schedule=schedule,
@@ -157,4 +158,4 @@ def plan_serving_fleet(workloads: Tuple[ServingWorkload, ...] | list,
                       objective=objective, weights=weights,
                       priorities=priorities, allocator=allocator,
                       mapper=mapper, step=step, max_rate=max_rate,
-                      vm_sizes=(4, 2, 1))
+                      vm_sizes=vm_class_family("tpu-host"))

@@ -22,9 +22,9 @@ from repro.analysis import (PlanIntegrityError, Severity, lint_paths,
 from repro.core import (ALLOCATORS, DagArrive, DagDepart, Dataflow, Edge,
                         FleetController, ModelLibrary, PerfModel, RateChange,
                         RoutingPolicy, SlotId, UnsupportableDagError,
-                        UnsupportableRateError, VM, VmAdd, build_group_index,
-                        diamond_dag, linear_dag, plan, plan_fleet,
-                        replan_incremental, star_dag)
+                        UnsupportableRateError, VM, VmAdd, VmClass,
+                        build_group_index, diamond_dag, linear_dag, plan,
+                        plan_fleet, replan_incremental, star_dag)
 from repro.core.fleet import SlotSurfaceCache
 from repro.core.online import EventTrace
 from repro.core.perfmodel import ModelPoint
@@ -256,6 +256,18 @@ def test_sch_bad_omega(s):
     assert codes(verify_schedule(s)) == ["SCH_BAD_OMEGA"]
 
 
+def test_res_bad_class(s):
+    s.vms[0].speed = -1.0
+    assert codes(verify_schedule(s)) == ["RES_BAD_CLASS"]
+
+
+def test_res_mixed_speed(lib):
+    big = copy.deepcopy(plan(linear_dag(), 200.0, lib))
+    assert len(big.vms) >= 2
+    big.vms[0].speed = 2.0
+    assert codes(verify_schedule(big)) == ["RES_MIXED_SPEED"]
+
+
 def test_sch_alloc_omega_mismatch(s):
     s.omega *= 2.0
     assert codes(verify_schedule(s)) == ["SCH_ALLOC_OMEGA_MISMATCH"]
@@ -385,6 +397,40 @@ def test_flt_surface_stale(fp, lib):
 def test_flt_budget_exceeded(fp):
     fp.budget_slots = fp.total_estimated_slots - 1
     assert codes(verify_fleet_plan(fp)) == ["FLT_BUDGET_EXCEEDED"]
+
+
+# -- min_cost fleet plan ------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cost_fleet(lib):
+    classes = (VmClass("big", 8, cost_per_hour=0.60),
+               VmClass("small", 2, cost_per_hour=0.20))
+    return plan_fleet({"linear": linear_dag(), "star": star_dag()}, lib,
+                      budget_dollars=2.0, objective="min_cost", step=STEP,
+                      max_rate=MAX_RATE, vm_sizes=classes)
+
+
+@pytest.fixture()
+def cfp(cost_fleet):
+    return copy.deepcopy(cost_fleet)
+
+
+def test_cost_fleet_verifies_clean(cost_fleet, lib):
+    assert verify_fleet_plan(cost_fleet, lib, deep=True) == []
+
+
+def test_flt_cost_mismatch(cfp):
+    name = next(n for n, e in cfp.entries.items() if e.grid_index >= 0)
+    # decrease, so the dollar total cannot also trip the budget check
+    cfp.entries[name].est_cost_per_hour -= 0.05
+    assert codes(verify_fleet_plan(cfp)) == ["FLT_COST_MISMATCH"]
+
+
+def test_flt_budget_dollars_exceeded(cfp):
+    spent = sum(e.est_cost_per_hour for e in cfp.entries.values())
+    assert spent > 0
+    cfp.budget_dollars = spent / 2
+    assert codes(verify_fleet_plan(cfp)) == ["FLT_BUDGET_DOLLARS_EXCEEDED"]
 
 
 def test_flt_pool_mismatch(fp):
