@@ -11,7 +11,7 @@ from __future__ import annotations
 import json
 import sys
 
-from . import (bench_app_dags, bench_fleet, bench_latency,
+from . import (bench_app_dags, bench_chaos, bench_fleet, bench_latency,
                bench_mapper_search, bench_micro_dags, bench_online,
                bench_optimized, bench_perfmodels, bench_predictability,
                bench_prove, bench_roofline, bench_serving, bench_sweep)
@@ -28,6 +28,7 @@ BENCHES = [
     ("fleet_planner", bench_fleet.run),
     ("fleet_cost_frontier", bench_fleet.cost_frontier),
     ("online_controller", bench_online.run),
+    ("chaos_enactment", bench_chaos.run),
     ("rate_prover", bench_prove.run),
     ("serving_planner", bench_serving.run),
     ("roofline_table", bench_roofline.run),
@@ -45,6 +46,7 @@ def main() -> None:
         for name, fn in (("sweep_smoke", bench_sweep.smoke),
                          ("mapper_search_smoke", bench_mapper_search.smoke),
                          ("online_controller_smoke", bench_online.smoke),
+                         ("chaos_smoke", bench_chaos.smoke),
                          ("rate_prover_smoke", bench_prove.smoke),
                          ("fleet_cost_smoke", bench_fleet.smoke)):
             derived, us = timed(fn)

@@ -39,8 +39,10 @@ from repro.core.diagnostics import (       # noqa: F401  (re-exports)
 
 from repro.analysis.verify import (        # noqa: F401
     verify_allocation,
+    verify_calibration,
     verify_controller,
     verify_dag,
+    verify_enactment,
     verify_fleet_plan,
     verify_grid,
     verify_models,
@@ -68,7 +70,8 @@ __all__ = [
     "resolve_validate",
     "verify_dag", "verify_models", "verify_grid", "verify_allocation",
     "verify_schedule", "verify_fleet_plan", "verify_rate_decisions",
-    "verify_trace", "verify_controller",
+    "verify_trace", "verify_controller", "verify_enactment",
+    "verify_calibration",
     "lint_source", "lint_paths", "RULES",
     "analyze_paths", "analyze_project", "Project", "FLOW_RULES",
     # repro.analysis.prove (lazy: pulls numpy + the predictor):

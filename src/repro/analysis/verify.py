@@ -677,3 +677,130 @@ def verify_controller(ctl, *, deep: bool = False,
     out.extend(verify_fleet_plan(ctl.plan, ctl.models if deep else None,
                                  deep=deep, schedules_for=changed))
     return out
+
+# ---------------------------------------------------------------------------
+# Live enactment (runtime layer).
+# ---------------------------------------------------------------------------
+
+def verify_enactment(fleet) -> List[Violation]:
+    """Live-executor ↔ controller coherence (the :class:`LiveFleet`
+    ``validate=`` hook): every mapped controller entry has exactly one
+    executor, each executor enacts the entry's *exact* schedule object
+    (the identity rail), its slot groups cover the schedule's mapping, and
+    its jitted-op cache holds one op per (task, slot) group — anything
+    else is ``EXE_DELTA_DIVERGED``.
+
+    Duck-typed on the fleet (``ctl``, ``executors``) so the analysis layer
+    does not import the runtime package.
+    """
+    art = "LiveFleet"
+    out: List[Violation] = []
+    ctl = fleet.ctl
+    executors = fleet.executors
+    mapped = {n for n in ctl.dag_names if ctl.entry(n).schedule is not None}
+    extra = sorted(set(executors) - mapped)
+    missing = sorted(mapped - set(executors))
+    if extra:
+        out.append(_v("EXE_DELTA_DIVERGED", Severity.ERROR, art, "executors",
+                      f"executors {extra} have no mapped controller entry "
+                      "(retire delta not enacted)"))
+    if missing:
+        out.append(_v("EXE_DELTA_DIVERGED", Severity.ERROR, art, "executors",
+                      f"mapped DAGs {missing} have no executor "
+                      "(spawn delta not enacted)"))
+    for name in sorted(mapped & set(executors)):
+        ex = executors[name]
+        sched = ctl.entry(name).schedule
+        path = f"executors[{name!r}]"
+        if ex.schedule is not sched:
+            out.append(_v("EXE_DELTA_DIVERGED", Severity.ERROR, art,
+                          f"{path}.schedule",
+                          "executor schedule is not the controller entry's "
+                          "schedule object (delta applied to a copy or "
+                          "not applied)"))
+            continue
+        want_slots = set(sched.mapping.slots())
+        have_slots = {s for g in ex.groups.values() for s in g}
+        if have_slots != want_slots:
+            out.append(_v("EXE_DELTA_DIVERGED", Severity.ERROR, art,
+                          f"{path}.groups",
+                          f"executor slot groups cover {sorted(map(repr, have_slots))} "
+                          f"but the schedule maps {sorted(map(repr, want_slots))}"))
+        want_ops = {(task, slot) for task, g in ex.groups.items()
+                    for slot in g}
+        have_ops = set(ex._ops)
+        if have_ops != want_ops:
+            stale = sorted(f"{t}@{s!r}" for t, s in have_ops - want_ops)
+            absent = sorted(f"{t}@{s!r}" for t, s in want_ops - have_ops)
+            out.append(_v("EXE_DELTA_DIVERGED", Severity.ERROR, art,
+                          f"{path}._ops",
+                          "jitted-op cache diverges from the slot groups"
+                          + (f"; stale {stale}" if stale else "")
+                          + (f"; missing {absent}" if absent else "")))
+        undevised = sorted(repr(s) for s in want_slots
+                           if s not in ex.slot_device)
+        if undevised:
+            out.append(_v("EXE_DELTA_DIVERGED", Severity.ERROR, art,
+                          f"{path}.slot_device",
+                          f"mapped slots {undevised} have no device pin"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Measured-model recalibration (calibrate layer).
+# ---------------------------------------------------------------------------
+
+def verify_calibration(before: ModelLibrary, result) -> List[Violation]:
+    """Interpolation-soundness of a recalibrated library
+    (:func:`repro.core.calibrate.recalibrate`'s ``validate=`` hook).
+
+    A recalibration is a uniform positive rescale of each kind's rate
+    column: the thread-count grid, CPU/memory columns, ``static`` flags,
+    and the *shape* of the rate profile (the sign pattern of successive
+    rate differences, which the interpolated ``I`` and its integer-grid
+    inverse ``T`` rely on) must survive — any break is
+    ``CAL_TABLE_NONMONOTONE``.
+    """
+    art = "CalibrationResult"
+    out: List[Violation] = []
+    after = result.library
+    if set(after.kinds()) != set(before.kinds()):
+        out.append(_v("CAL_TABLE_NONMONOTONE", Severity.ERROR, art,
+                      "library",
+                      f"recalibrated kinds {sorted(after.kinds())} != "
+                      f"original kinds {sorted(before.kinds())}"))
+        return out
+    for kind in sorted(before.kinds()):
+        old, new = before[kind], after[kind]
+        path = f"library[{kind!r}]"
+        if new.static != old.static:
+            out.append(_v("CAL_TABLE_NONMONOTONE", Severity.ERROR, art, path,
+                          "recalibration flipped the static flag"))
+        old_taus = [p.tau for p in old.points]
+        new_taus = [p.tau for p in new.points]
+        if new_taus != old_taus:
+            out.append(_v("CAL_TABLE_NONMONOTONE", Severity.ERROR, art, path,
+                          f"thread-count grid changed {old_taus} -> "
+                          f"{new_taus} (recalibration only rescales rates)"))
+            continue
+        rates = np.array([p.rate for p in new.points], dtype=float)
+        if not np.all(np.isfinite(rates)) or np.any(rates <= 0):
+            out.append(_v("CAL_TABLE_NONMONOTONE", Severity.ERROR, art, path,
+                          f"recalibrated rates {rates.tolist()} must be "
+                          "positive and finite"))
+            continue
+        for field in ("cpu", "mem"):
+            if any(getattr(n, field) != getattr(o, field)
+                   for n, o in zip(new.points, old.points)):
+                out.append(_v("CAL_TABLE_NONMONOTONE", Severity.ERROR, art,
+                              path,
+                              f"recalibration changed the {field} column "
+                              "(only rates are measured)"))
+        old_sign = np.sign(np.diff([p.rate for p in old.points]))
+        new_sign = np.sign(np.diff(rates))
+        if len(old_sign) and not np.array_equal(old_sign, new_sign):
+            out.append(_v("CAL_TABLE_NONMONOTONE", Severity.ERROR, art, path,
+                          "rate-profile shape changed: successive-difference "
+                          f"signs {old_sign.tolist()} -> {new_sign.tolist()} "
+                          "(a uniform positive rescale preserves them)"))
+    return out

@@ -52,6 +52,9 @@ from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
 from .online import (ControllerLog, ControllerRecord, DagArrive, DagDepart,
                      Event, EventTrace, FleetController, RateChange, VmAdd,
                      VmFail)
+from .calibrate import (CalibrationResult, DriftAlert, KindCalibration,
+                        TaskMeasurement, detect_drift, rate_error,
+                        recalibrate)
 from .simulator import (DataflowSimulator, SimResult, SweepBatch, SweepRaw,
                         measured_resources, scan_kernel_cache_clear,
                         scan_kernel_cache_stats)

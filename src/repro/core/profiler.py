@@ -142,12 +142,21 @@ class LiveTrialRunner:
         stop = threading.Event()
 
         def worker(k: int) -> None:
-            while True:
-                item = work_q.get()
+            # hang protection: never block indefinitely on the queue (a
+            # missed sentinel must not wedge the thread), honour the stop
+            # event, and survive a raising operator (tuple counted lost)
+            while not stop.is_set():
+                try:
+                    item = work_q.get(timeout=0.05)
+                except queue_mod.Empty:
+                    continue
                 if item is None:
                     return
                 t0 = time.perf_counter()
-                op()
+                try:
+                    op()
+                except Exception:
+                    continue             # lost tuple: no completion record
                 t1 = time.perf_counter()
                 busy[k] += t1 - t0
                 with done_lock:
@@ -172,8 +181,16 @@ class LiveTrialRunner:
             time.sleep(0.005)
         for _ in threads:
             work_q.put(None)
+        # hard deadline for teardown: a worker wedged inside op() cannot
+        # hold the trial (or the tier-1 suite) hostage — stop the rest and
+        # abandon the wedged daemon thread
+        join_deadline = time.perf_counter() + max(1.0, self.trial_seconds)
         for t in threads:
-            t.join(timeout=1.0)
+            t.join(timeout=max(0.0, join_deadline - time.perf_counter()))
+        stop.set()
+        for t in threads:
+            if t.is_alive():
+                t.join(timeout=0.1)
         wall = time.perf_counter() - start
         with done_lock:
             lat = [c - a for a, c in sorted(done)]

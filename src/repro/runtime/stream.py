@@ -1,4 +1,12 @@
-"""Micro-batch stream framing for the executor."""
+"""Micro-batch stream framing for the executor, over a pluggable clock.
+
+The executor's pacing, latency accounting, retry backoff, watchdog and
+load-shedding decisions all read ONE clock object.  :class:`WallClock` is
+the real thing; :class:`VirtualClock` advances only when slept on, which
+makes whole chaos replays deterministic (bit-identical timelines across
+runs) and fast (no real sleeping) — the mode the chaos test-suite and
+``benchmarks/bench_chaos.py`` run in.
+"""
 
 from __future__ import annotations
 
@@ -11,13 +19,42 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class WallClock:
+    """Real time: ``perf_counter`` + ``time.sleep``."""
+
+    virtual = False
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+
+class VirtualClock:
+    """Deterministic simulated time: ``sleep`` advances, nothing blocks."""
+
+    virtual = True
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def now(self) -> float:
+        return self.t
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            self.t += float(seconds)
+
+
 @dataclasses.dataclass
 class MicroBatch:
     """A frame of tuples moving through the dataflow."""
 
     seq: int                      # frame sequence number
     arrays: Dict[str, jax.Array]  # leading axis = tuple axis
-    created: float                # wall-clock arrival at source (s)
+    created: float                # clock arrival time at the source (s)
 
     @property
     def size(self) -> int:
@@ -28,32 +65,37 @@ class SyntheticSource:
     """Constant-rate synthetic tuple source (§8.3: single opaque field).
 
     Emits micro-batches of ``batch`` tuples; the admission times honour the
-    requested rate so end-to-end latency measurements are meaningful.
+    requested rate *on the supplied clock* so end-to-end latency
+    measurements are meaningful under both wall and virtual time.
     """
 
     def __init__(self, rate: float, batch: int = 32, payload_len: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, clock: Optional[WallClock] = None,
+                 start_seq: int = 0):
         self.rate = rate
         self.batch = batch
         self.payload_len = payload_len
         self.rng = np.random.default_rng(seed)
-        self._seq = 0
+        self.clock = clock if clock is not None else WallClock()
+        self._seq = int(start_seq)
 
-    def frames(self, duration: float) -> Iterator[MicroBatch]:
-        n_frames = max(1, int(self.rate * duration / self.batch))
+    def frames(self, duration: float = 0.0, *,
+               n_frames: Optional[int] = None) -> Iterator[MicroBatch]:
+        if n_frames is None:
+            n_frames = max(1, int(self.rate * duration / self.batch))
         interval = self.batch / self.rate
-        start = time.perf_counter()
+        start = self.clock.now()
         for i in range(n_frames):
             sched = start + i * interval
-            now = time.perf_counter()
+            now = self.clock.now()
             if sched > now:
-                time.sleep(sched - now)
+                self.clock.sleep(sched - now)
             payload = self.rng.integers(32, 127, size=(self.batch, self.payload_len),
                                         dtype=np.uint8)
             value = self.rng.random(self.batch, dtype=np.float32)
             yield MicroBatch(
                 seq=self._seq,
                 arrays={"payload": jnp.asarray(payload), "value": jnp.asarray(value)},
-                created=max(sched, now),
+                created=max(sched, self.clock.now()),
             )
             self._seq += 1

@@ -729,3 +729,69 @@ def test_lint_suppression_unknown_code_warns():
 
 def test_lint_syntax_error_is_reported():
     assert codes(lint_source("def broken(:\n")) == ["LINT000"]
+
+
+# -- live enactment / recalibration (runtime + calibrate layers) -------------
+
+def _live_fleet(lib):
+    from repro.runtime import FaultPlan, LiveFleet, VirtualClock
+    ctl = FleetController(lib, budget_slots=12)
+    fleet = LiveFleet(ctl, fault_plan=FaultPlan.none(), clock=VirtualClock(),
+                      frames_per_event=0)    # no measurement: structure only
+    fleet.apply(DagArrive("d1", diamond_dag(), max_rate=80.0), at=0.0)
+    return fleet
+
+
+def test_exe_delta_diverged(lib):
+    from repro.analysis import verify_enactment
+    fleet = _live_fleet(lib)
+    assert verify_enactment(fleet) == []
+    # corruption: one jitted op dropped from the executor's cache — the
+    # live state no longer enacts the controller's schedule
+    ex = fleet.executors["d1"]
+    del ex._ops[next(iter(ex._ops))]
+    assert codes(verify_enactment(fleet)) == ["EXE_DELTA_DIVERGED"]
+
+
+def test_exe_delta_diverged_schedule_copy(lib):
+    from repro.analysis import verify_enactment
+    fleet = _live_fleet(lib)
+    # corruption: executor holds a copy, not the controller's object — the
+    # identity rail (untouched DAGs keep their exact schedule) is broken
+    ex = fleet.executors["d1"]
+    ex.schedule = copy.copy(ex.schedule)
+    assert codes(verify_enactment(fleet)) == ["EXE_DELTA_DIVERGED"]
+
+
+def _calibration(lib):
+    from repro.core import TaskMeasurement, recalibrate
+    ms = [TaskMeasurement(kind="parse_xml", task="b", tau=1, tuples=500.0,
+                          busy_seconds=500.0 / (0.5 * lib["parse_xml"].I(1)))]
+    return ms, recalibrate(lib, ms, alpha=0.9)
+
+
+def test_cal_table_nonmonotone(lib):
+    from repro.analysis import verify_calibration
+    ms, result = _calibration(lib)
+    assert verify_calibration(lib, result) == []
+    assert result.per_kind["parse_xml"].changed
+    # corruption: one recalibrated point dragged below its neighbour,
+    # flipping the rate profile's shape (breaks I/T interpolation
+    # soundness — not a uniform rescale any more)
+    m = result.library["parse_xml"]
+    pts = [dataclasses.replace(p) for p in m.points]
+    pts[0] = dataclasses.replace(pts[0], rate=pts[1].rate * 0.5)
+    result.library._models["parse_xml"] = PerfModel(
+        m.kind, pts, static=m.static)
+    assert codes(verify_calibration(lib, result)) == ["CAL_TABLE_NONMONOTONE"]
+
+
+def test_cal_table_grid_change(lib):
+    from repro.analysis import verify_calibration
+    ms, result = _calibration(lib)
+    # corruption: recalibration must not change the measured thread grid
+    m = result.library["parse_xml"]
+    result.library._models["parse_xml"] = PerfModel(
+        m.kind, [dataclasses.replace(p, tau=p.tau + 1) for p in m.points],
+        static=m.static)
+    assert codes(verify_calibration(lib, result)) == ["CAL_TABLE_NONMONOTONE"]
