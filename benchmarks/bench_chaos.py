@@ -24,8 +24,6 @@ artifact).
 
 from __future__ import annotations
 
-import json
-
 from repro.core import (DagArrive, DagDepart, FleetController, ModelLibrary,
                         PerfModel, RateChange, diamond_dag, linear_dag,
                         paper_library, rate_error, recalibrate, star_dag)
@@ -33,7 +31,7 @@ from repro.core.perfmodel import ModelPoint
 from repro.runtime import (Fault, FaultKind, FaultPlan, LiveFleet,
                            VirtualClock)
 
-from .common import Table
+from .common import Table, write_bench_json
 
 JSON_PATH = "BENCH_chaos.json"
 BUDGET = 40
@@ -194,9 +192,11 @@ def run() -> dict:
     chaos = _chaos_replay(lib)
     calib = _recalibration(lib)
     derived = {**chaos, **{f"recal_{k}": v for k, v in calib.items()}}
-    with open(JSON_PATH, "w") as f:
-        json.dump(derived, f, indent=2, sort_keys=True)
-    print(f"wrote {JSON_PATH}")
+    write_bench_json(JSON_PATH, "chaos_enactment", derived,
+                     units={"recal_error_before": "rel_err",
+                            "recal_error_after": "rel_err",
+                            "recal_improvement_x": "x",
+                            "recal_samples": "count"})
     return derived
 
 

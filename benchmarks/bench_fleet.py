@@ -15,14 +15,13 @@ pure function of the slot estimates and must agree exactly.
 from __future__ import annotations
 
 import itertools
-import json
 import time
 
 from repro.core import (ALL_DAGS, VmClass, paper_library, plan_fleet,
                         vm_classes_from_sizes)
 from repro.core.scheduler import max_planned_rate
 
-from .common import Table
+from .common import Table, write_bench_json
 
 SIZES = (2, 3, 4, 6)
 BUDGETS = (16, 32, 64)
@@ -120,9 +119,8 @@ def cost_frontier() -> dict:
     tbl.show("cost-vs-rate frontier: homogeneous vs mixed VM classes")
     derived = {"mixed_dominates_homogeneous": all_dominate,
                "frontier": frontier}
-    with open(JSON_PATH, "w") as f:
-        json.dump(derived, f, indent=2, sort_keys=True)
-    print(f"wrote {JSON_PATH}")
+    write_bench_json(JSON_PATH, "fleet_cost_frontier", derived,
+                     units={"frontier": "usd_per_hour/tuples_per_s"})
     return derived
 
 

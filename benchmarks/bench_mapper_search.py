@@ -19,7 +19,6 @@ artifact.
 
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
@@ -29,7 +28,7 @@ from repro.core.allocation import ALLOCATORS
 from repro.core.search import evaluate_candidates, search_mapping
 from repro.core.simulator import scan_kernel_cache_stats
 
-from .common import Table
+from .common import Table, write_bench_json
 
 RAW_FIELDS = ("queues", "busy", "served", "realized", "latency")
 JSON_PATH = "BENCH_mapper_search.json"
@@ -125,9 +124,9 @@ def run(*, n_moves: int = 12, n_fracs: int = 11, duration: float = 8.0,
                "max_err": agree_err,
                "rerun_recompiles": total_recompiles,
                "dags": out}
-    with open(JSON_PATH, "w") as f:
-        json.dump(derived, f, indent=2, sort_keys=True)
-    print(f"wrote {JSON_PATH}")
+    write_bench_json(JSON_PATH, "mapper_search", derived,
+                     units={"vmap_speedup_min": "x",
+                            "rerun_recompiles": "count"})
     return derived
 
 

@@ -1,0 +1,198 @@
+"""Telemetry overhead budget + predictability-scoreboard rails.
+
+Two claims the ``repro.obs`` layer must keep honest:
+
+* **Overhead** — replaying :mod:`bench_online`'s 20-event bursty trace
+  with full span tracing AND the metrics registry enabled must cost
+  < 5% extra median replan latency over the same replay with telemetry
+  disabled (the disabled path is one attribute check per span/counter).
+  Medians are min-of-N to shed scheduler noise.
+* **Predictability rails** — on the fault-free rail (planner tables ==
+  runtime truth) the planned-vs-cosimulated rate residual per DAG is
+  EXACTLY ``0.0`` (bit-clean, not approximately clean); on a 2x
+  mis-profiled rail the residuals go nonzero and the
+  :class:`~repro.core.calibrate.AutoRecalPolicy` loop inside
+  :class:`~repro.runtime.LiveFleet` fires a model recalibration that
+  collapses the measured-vs-predicted rate error.
+
+Writes ``BENCH_obs.json`` (nightly artifact, shared envelope schema).
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from repro import obs
+from repro.core import (DagArrive, FleetController, ModelLibrary, PerfModel,
+                        RateChange, diamond_dag, linear_dag, paper_library,
+                        rate_error)
+from repro.core.calibrate import AutoRecalPolicy
+from repro.core.perfmodel import ModelPoint
+from repro.obs import Scoreboard, Tracer
+from repro.obs.scoreboard import MEASURED, SIMULATED
+from repro.runtime import FaultPlan, LiveFleet, VirtualClock
+
+from .bench_online import BUDGET0, MAKERS, MAX_RATE, STEP, TRACE
+from .common import Table, write_bench_json
+
+JSON_PATH = "BENCH_obs.json"
+OVERHEAD_BUDGET = 0.05      # < 5% median replan-latency overhead
+REPS = 3                    # min-of-N medians
+
+
+def _replay_latencies(lib) -> list:
+    """Replay the 20-event trace; per-event replan latencies in seconds."""
+    from repro.core import DagDepart, VmAdd, VmFail
+    ctl = FleetController(lib, budget_slots=BUDGET0, mapper="sam",
+                          step=STEP, max_rate=MAX_RATE, validate=False)
+    out = []
+    for kind, payload in TRACE:
+        if kind == "arrive":
+            name, maker, w, p, demand = payload
+            event = DagArrive(name, MAKERS[maker](), weight=w, priority=p,
+                              max_rate=demand)
+        elif kind == "depart":
+            event = DagDepart(payload)
+        elif kind == "rate":
+            event = RateChange(*payload)
+        elif kind == "grow":
+            event = VmAdd(payload)
+        else:
+            event = VmFail(ctl.entry(payload).schedule.vms[-1].id)
+        out.append(ctl.apply(event).replan_latency_s)
+    return out
+
+
+def _median_ms(lib, reps: int) -> float:
+    """Min-of-``reps`` median per-event replan latency, in ms."""
+    meds = []
+    for _ in range(reps):
+        meds.append(statistics.median(_replay_latencies(lib)))
+    return min(meds) * 1e3
+
+
+def measure_overhead(reps: int = REPS) -> dict:
+    """Disabled vs fully-enabled telemetry over the 20-event trace."""
+    lib = paper_library()
+    _replay_latencies(lib)                       # warm the JIT/kernel cache
+    prev_tracer = obs.get_tracer()
+    obs.disable()
+    obs.REGISTRY.reset()
+    try:
+        disabled_ms = _median_ms(lib, reps)
+        obs.set_tracer(Tracer(enabled=True))     # fresh, bounded span store
+        obs.enable()
+        enabled_ms = _median_ms(lib, reps)
+        n_spans = len(obs.get_tracer().signature())
+    finally:
+        obs.disable()
+        obs.REGISTRY.reset()
+        obs.set_tracer(prev_tracer)
+    overhead = enabled_ms / disabled_ms - 1.0
+    return {
+        "median_disabled_ms": round(disabled_ms, 4),
+        "median_enabled_ms": round(enabled_ms, 4),
+        "overhead_pct": round(overhead * 100, 2),
+        "overhead_under_5pct": overhead < OVERHEAD_BUDGET,
+        "spans_recorded": n_spans,
+    }
+
+
+def _scaled(lib: ModelLibrary, factor: float) -> ModelLibrary:
+    """Inflate every non-static table's rate column by ``factor``."""
+    out = ModelLibrary({})
+    for kind in lib.kinds():
+        model = lib[kind]
+        pts = [ModelPoint(p.tau, p.rate * (1.0 if model.static else factor),
+                          p.cpu, p.mem) for p in model.points]
+        out.add(PerfModel(kind, pts, static=model.static))
+    return out
+
+
+def scoreboard_rails() -> dict:
+    """Fault-free residuals exactly 0; mis-profiled residuals trigger recal."""
+    lib = paper_library()
+
+    # -- fault-free rail: planner promise == cosimulated delivery --------
+    ctl = FleetController(lib, budget_slots=24)
+    ctl.apply(DagArrive("d1", diamond_dag(), max_rate=80.0))
+    ctl.apply(DagArrive("d2", linear_dag(), max_rate=60.0))
+    board = Scoreboard()
+    board.ingest_controller(ctl, t=0.0)
+    board.ingest_cosim(ctl.cosimulate(), t=1.0)
+    clean = board.summary("rate", SIMULATED)
+    fault_free_exact = all(s.exact for s in clean.values()) and len(clean) == 2
+
+    # -- mis-profiled rail: 2x-optimistic tables, truth-priced runtime ---
+    optimistic = _scaled(lib, 2.0)
+    fleet = LiveFleet(FleetController(optimistic, budget_slots=24),
+                      fault_plan=FaultPlan.none(), clock=VirtualClock(),
+                      truth=lib,
+                      auto_recal=AutoRecalPolicy(threshold=0.15,
+                                                 cooldown_events=2))
+    board2 = Scoreboard()
+    records = []
+    for i, event in enumerate([DagArrive("d1", diamond_dag(),
+                                         max_rate=4000.0),
+                               RateChange("d1", 1500.0)]):
+        rec = fleet.apply(event, at=float(i))
+        records.append(rec)
+        board2.ingest_controller(fleet.ctl, t=float(i))
+        board2.ingest_reports(rec.reports, t=float(i))
+    drifty = board2.summary("rate", MEASURED)
+    residuals_nonzero = any(not s.exact for s in drifty.values())
+    recal_fired = bool(fleet.recal_ticks)
+    samples = fleet.measurements()
+    error_after = rate_error(fleet.ctl.models, samples) if samples else 0.0
+    return {
+        "fault_free_rate_residual_exact_zero": fault_free_exact,
+        "fault_free_max_abs_residual": max(
+            (s.max_abs for s in clean.values()), default=0.0),
+        "misprofiled_residuals_nonzero": residuals_nonzero,
+        "misprofiled_recalibrated": recal_fired,
+        "recal_ticks": list(fleet.recal_ticks),
+        "drift_magnitude_last": round(records[-1].drift_magnitude, 4),
+        "rate_error_after_recal": round(error_after, 4),
+        "changed_kinds": sorted(
+            {k for r in fleet.recalibrations for k in r.changed_kinds}),
+    }
+
+
+def run() -> dict:
+    over = measure_overhead()
+    rails = scoreboard_rails()
+
+    tbl = Table(["metric", "value"])
+    for k, v in {**over, **rails}.items():
+        tbl.add(k, v if not isinstance(v, float) else round(v, 4))
+    tbl.show("telemetry overhead + scoreboard rails")
+
+    assert over["overhead_under_5pct"], (
+        f"telemetry overhead {over['overhead_pct']}% >= 5% "
+        f"({over['median_enabled_ms']} ms vs {over['median_disabled_ms']} ms)")
+    assert rails["fault_free_rate_residual_exact_zero"], (
+        "fault-free planned-vs-cosimulated residual not exactly 0.0")
+    assert rails["misprofiled_residuals_nonzero"], (
+        "2x mis-profiled rail produced no nonzero residuals")
+    assert rails["misprofiled_recalibrated"], (
+        "2x mis-profiled rail did not trigger auto-recalibration")
+
+    derived = {**over, **rails}
+    write_bench_json(JSON_PATH, "obs_overhead", derived,
+                     units={"median_disabled_ms": "ms",
+                            "median_enabled_ms": "ms",
+                            "overhead_pct": "pct",
+                            "spans_recorded": "count",
+                            "fault_free_max_abs_residual": "tuples_per_s",
+                            "drift_magnitude_last": "rel_err",
+                            "rate_error_after_recal": "rel_err"})
+    return derived
+
+
+def smoke() -> dict:
+    """Tier-1-safe obs smoke: the same budget asserts as :func:`run`."""
+    return run()
+
+
+if __name__ == "__main__":
+    run()

@@ -23,7 +23,6 @@ median latency, strictly fewer migrated threads on every non-global event
 
 from __future__ import annotations
 
-import json
 import statistics
 import time
 
@@ -32,7 +31,7 @@ from repro.core import (DagArrive, DagDepart, FleetController, RateChange,
                         paper_library, plan_fleet, star_dag, traffic_dag)
 from repro.core.scheduler import replan_on_failure
 
-from .common import Table
+from .common import Table, write_bench_json
 
 JSON_PATH = "BENCH_online.json"
 STEP = 2.0
@@ -248,9 +247,16 @@ def run() -> dict:
         "threads_full_redeploy_total": sum(r["full_redeploy"]
                                            for r in rows),
     }
-    with open(JSON_PATH, "w") as f:
-        json.dump(derived, f, indent=2, sort_keys=True)
-    print(f"wrote {JSON_PATH}")
+    write_bench_json(JSON_PATH, "online_controller", derived,
+                     units={"median_incremental_ms": "ms",
+                            "median_full_ms": "ms",
+                            "validate_overhead_pct": "pct",
+                            "median_latency_speedup": "x",
+                            "threads_migrated_total": "count",
+                            "threads_full_diff_total": "count",
+                            "threads_full_redeploy_total": "count",
+                            "batch_passes": "count",
+                            "non_global_events": "count"})
     return derived
 
 

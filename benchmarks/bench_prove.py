@@ -17,7 +17,6 @@ Writes ``BENCH_prove.json`` (nightly artifact).
 
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
@@ -25,7 +24,7 @@ import numpy as np
 from repro.core import (DagArrive, FleetController, diamond_dag, linear_dag,
                         paper_library, star_dag, traffic_dag)
 
-from .common import Table
+from .common import Table, write_bench_json
 
 JSON_PATH = "BENCH_prove.json"
 
@@ -97,8 +96,11 @@ def run() -> dict:
            "prove_s": t_prove, "sim_s": t_sim,
            "speedup": t_sim / max(t_prove, 1e-9),
            "fast_path_proved": skipped, "fast_path_s": t_fast}
-    with open(JSON_PATH, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench_json(JSON_PATH, "rate_prover", out,
+                     units={"prove_s": "s", "sim_s": "s", "fast_path_s": "s",
+                            "speedup": "x", "decided": "count",
+                            "total": "count", "mismatches": "count",
+                            "fast_path_proved": "count"})
     return out
 
 

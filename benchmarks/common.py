@@ -1,15 +1,70 @@
-"""Benchmark helpers: timing, CSV rows, R^2."""
+"""Benchmark helpers: timing, CSV rows, R^2, and the BENCH_*.json schema."""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
+import subprocess
 import time
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+#: Version of the ``BENCH_*.json`` payload envelope.  Bump when the
+#: envelope shape (not the per-bench ``metrics``) changes.
+BENCH_SCHEMA_VERSION = 1
 
 
 def timed(fn: Callable[[], object]) -> Tuple[object, float]:
     t0 = time.perf_counter()
     out = fn()
     return out, (time.perf_counter() - t0) * 1e6   # us
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _host_info() -> Dict[str, object]:
+    return {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def write_bench_json(path: str, name: str, metrics: Mapping[str, object],
+                     units: Optional[Mapping[str, str]] = None) -> dict:
+    """Write a ``BENCH_*.json`` artifact on the shared envelope schema.
+
+    Every nightly artifact carries the same header — schema version, bench
+    name, git SHA, host fingerprint, creation time — so downstream tooling
+    can join artifacts across benches and commits without per-file parsers.
+    ``units`` maps metric names to their unit string (e.g. ``"ms"``,
+    ``"pct"``, ``"count"``); unlisted metrics are dimensionless.
+    """
+    payload = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "bench": name,
+        "git_sha": _git_sha(),
+        "host": _host_info(),
+        "created_unix_s": round(time.time(), 3),
+        "units": dict(units or {}),
+        "metrics": dict(metrics),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    return payload
 
 
 def r_squared(actual: Sequence[float], predicted: Sequence[float]) -> float:

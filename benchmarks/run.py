@@ -12,9 +12,10 @@ import json
 import sys
 
 from . import (bench_app_dags, bench_chaos, bench_fleet, bench_latency,
-               bench_mapper_search, bench_micro_dags, bench_online,
-               bench_optimized, bench_perfmodels, bench_predictability,
-               bench_prove, bench_roofline, bench_serving, bench_sweep)
+               bench_mapper_search, bench_micro_dags, bench_obs,
+               bench_online, bench_optimized, bench_perfmodels,
+               bench_predictability, bench_prove, bench_roofline,
+               bench_serving, bench_sweep)
 from .common import timed
 
 BENCHES = [
@@ -28,6 +29,7 @@ BENCHES = [
     ("fleet_planner", bench_fleet.run),
     ("fleet_cost_frontier", bench_fleet.cost_frontier),
     ("online_controller", bench_online.run),
+    ("obs_telemetry", bench_obs.run),
     ("chaos_enactment", bench_chaos.run),
     ("rate_prover", bench_prove.run),
     ("serving_planner", bench_serving.run),
@@ -46,6 +48,7 @@ def main() -> None:
         for name, fn in (("sweep_smoke", bench_sweep.smoke),
                          ("mapper_search_smoke", bench_mapper_search.smoke),
                          ("online_controller_smoke", bench_online.smoke),
+                         ("obs_smoke", bench_obs.smoke),
                          ("chaos_smoke", bench_chaos.smoke),
                          ("rate_prover_smoke", bench_prove.smoke),
                          ("fleet_cost_smoke", bench_fleet.smoke)):

@@ -39,6 +39,7 @@ from repro.core.diagnostics import (       # noqa: F401  (re-exports)
 
 from repro.analysis.verify import (        # noqa: F401
     verify_allocation,
+    verify_autorecal,
     verify_calibration,
     verify_controller,
     verify_dag,
@@ -49,6 +50,7 @@ from repro.analysis.verify import (        # noqa: F401
     verify_rate_decisions,
     verify_schedule,
     verify_trace,
+    verify_tracer,
 )
 
 from repro.analysis.lint import (          # noqa: F401
@@ -71,7 +73,7 @@ __all__ = [
     "verify_dag", "verify_models", "verify_grid", "verify_allocation",
     "verify_schedule", "verify_fleet_plan", "verify_rate_decisions",
     "verify_trace", "verify_controller", "verify_enactment",
-    "verify_calibration",
+    "verify_calibration", "verify_tracer", "verify_autorecal",
     "lint_source", "lint_paths", "RULES",
     "analyze_paths", "analyze_project", "Project", "FLOW_RULES",
     # repro.analysis.prove (lazy: pulls numpy + the predictor):

@@ -574,8 +574,8 @@ def verify_trace(trace, live: Iterable[str] = ()) -> List[Violation]:
     times, no duplicate arrivals, no events against DAGs that are not live
     (use-after-depart), positive event payloads.  ``live`` seeds the DAG
     names already in the fleet before the trace starts."""
-    from repro.core.online import (DagArrive, DagDepart, RateChange, VmAdd,
-                                   VmFail)
+    from repro.core.online import (DagArrive, DagDepart, ModelRefresh,
+                                   RateChange, VmAdd, VmFail)
     art = "EventTrace"
     out: List[Violation] = []
     alive = set(live)
@@ -615,6 +615,11 @@ def verify_trace(trace, live: Iterable[str] = ()) -> List[Violation]:
             if ev.vm_id < 0:
                 out.append(_v("TRC_BAD_EVENT", Severity.ERROR, art, path,
                               f"VmFail.vm_id {ev.vm_id!r} must be >= 0"))
+        elif isinstance(ev, ModelRefresh):
+            if not all(isinstance(k, str) for k in ev.kinds):
+                out.append(_v("TRC_BAD_EVENT", Severity.ERROR, art, path,
+                              f"ModelRefresh.kinds {ev.kinds!r} must name "
+                              "task kinds (strings)"))
         else:
             out.append(_v("TRC_BAD_EVENT", Severity.ERROR, art, path,
                           f"unknown event type {type(ev).__name__}"))
@@ -803,4 +808,63 @@ def verify_calibration(before: ModelLibrary, result) -> List[Violation]:
                           "rate-profile shape changed: successive-difference "
                           f"signs {old_sign.tolist()} -> {new_sign.tolist()} "
                           "(a uniform positive rescale preserves them)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Telemetry (repro.obs layer).
+# ---------------------------------------------------------------------------
+
+def verify_tracer(tracer) -> List[Violation]:
+    """Well-formedness of a :class:`repro.obs.trace.Tracer` timeline.
+
+    * ``OBS_SPAN_UNCLOSED`` — the calling thread still has open spans: an
+      instrumentation site entered a span and never exited (an exception
+      path that bypassed ``__exit__``, or a hand-opened span leaked).
+    * ``OBS_SPAN_NEGATIVE`` — a closed span's end precedes its start,
+      which under the shared clock seam means the clock was swapped
+      mid-span (timestamps from two different clocks were mixed).
+    """
+    art = "Tracer"
+    out: List[Violation] = []
+    open_names = tracer.open_spans()
+    if open_names:
+        out.append(_v("OBS_SPAN_UNCLOSED", Severity.ERROR, art, "open",
+                      f"{len(open_names)} span(s) still open on this "
+                      f"thread: {open_names}"))
+    for i, span in enumerate(tracer.spans):
+        if span.t1 < span.t0:
+            out.append(_v("OBS_SPAN_NEGATIVE", Severity.ERROR, art,
+                          f"spans[{i}]",
+                          f"span {span.name!r} ends before it starts "
+                          f"(t0={span.t0!r}, t1={span.t1!r}) — clocks "
+                          "mixed mid-span?"))
+    return out
+
+
+def verify_autorecal(fleet) -> List[Violation]:
+    """Thrash-freedom of the closed recalibration loop
+    (:class:`repro.runtime.enact.LiveFleet` with an ``AutoRecalPolicy``).
+
+    ``CAL_AUTO_RECAL_LOOP`` fires when two recorded recalibrations sit
+    closer together (in controller events) than the policy's
+    ``cooldown_events`` — the loop is reacting to its own corrections,
+    i.e. oscillating drift is thrashing the planning tables.
+    """
+    art = "LiveFleet"
+    out: List[Violation] = []
+    policy = getattr(fleet, "auto_recal", None)
+    ticks = list(getattr(fleet, "recal_ticks", ()))
+    if policy is None or len(ticks) < 2:
+        return out
+    for i in range(1, len(ticks)):
+        gap = ticks[i] - ticks[i - 1]
+        if gap < policy.cooldown_events:
+            out.append(_v(
+                "CAL_AUTO_RECAL_LOOP", Severity.ERROR, art,
+                f"recal_ticks[{i}]",
+                f"recalibrations at event ticks {ticks[i - 1]} and "
+                f"{ticks[i]} are {gap} events apart, inside the "
+                f"{policy.cooldown_events}-event cooldown — the loop is "
+                "chasing its own corrections"))
     return out

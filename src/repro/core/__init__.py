@@ -50,11 +50,11 @@ from .fleet import (FleetEntry, FleetPlan, FleetSimEntry, FleetSimReport,
                     fleet_resource_surfaces, plan_fleet, replan_incremental,
                     simulate_fleet)
 from .online import (ControllerLog, ControllerRecord, DagArrive, DagDepart,
-                     Event, EventTrace, FleetController, RateChange, VmAdd,
-                     VmFail)
-from .calibrate import (CalibrationResult, DriftAlert, KindCalibration,
-                        TaskMeasurement, detect_drift, rate_error,
-                        recalibrate)
+                     Event, EventTrace, FleetController, ModelRefresh,
+                     RateChange, VmAdd, VmFail)
+from .calibrate import (AutoRecalPolicy, CalibrationResult, DriftAlert,
+                        KindCalibration, TaskMeasurement, detect_drift,
+                        rate_error, recalibrate)
 from .simulator import (DataflowSimulator, SimResult, SweepBatch, SweepRaw,
                         measured_resources, scan_kernel_cache_clear,
                         scan_kernel_cache_stats)

@@ -38,7 +38,8 @@ from .perfmodel import ModelLibrary, ModelPoint, PerfModel
 
 __all__ = [
     "TaskMeasurement", "KindCalibration", "CalibrationResult",
-    "DriftAlert", "recalibrate", "detect_drift", "rate_error",
+    "DriftAlert", "AutoRecalPolicy", "recalibrate", "detect_drift",
+    "rate_error",
 ]
 
 
@@ -105,6 +106,37 @@ class DriftAlert:
     measured_stable: bool
     measured_slope: float
     detail: str
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoRecalPolicy:
+    """Knobs for closed-loop auto-recalibration inside ``LiveFleet``.
+
+    The live fleet EWMA-damps the per-event measured rate error
+    (``smoothing`` is the weight of the newest sample); when the damped
+    magnitude crosses ``threshold`` it confirms against its own
+    ``DriftAlert`` stream and — if model and measurement genuinely
+    disagree — enacts :func:`recalibrate` (damping ``alpha``) through
+    :meth:`~repro.core.online.FleetController.recalibrate`.  At least
+    ``cooldown_events`` controller events must separate two
+    recalibrations, so oscillating drift cannot thrash the tables
+    (``CAL_AUTO_RECAL_LOOP`` in :mod:`repro.analysis.verify` enforces the
+    spacing on the recorded timeline).
+    """
+
+    threshold: float = 0.15      # damped |rate error| that arms a recal
+    cooldown_events: int = 3     # min controller events between recals
+    alpha: float = 0.9           # EWMA damping passed to recalibrate()
+    smoothing: float = 0.5       # EWMA weight of the newest error sample
+    confirm_with_drift: bool = True  # require a nonempty DriftAlert stream
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.smoothing <= 1.0:
+            raise ValueError("smoothing must be in (0, 1]")
+        if self.threshold < 0.0:
+            raise ValueError("threshold must be >= 0")
+        if self.cooldown_events < 1:
+            raise ValueError("cooldown_events must be >= 1")
 
 
 def _scaled_model(model: PerfModel, factor: float) -> PerfModel:

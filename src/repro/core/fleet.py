@@ -88,6 +88,7 @@ from .predictor import (GroupIndex, ResourcePrediction, ResourceSweep,
 from .routing import RoutingPolicy
 from .scheduler import Schedule, plan
 from .simulator import DataflowSimulator, SimResult, SweepBatch
+from ..obs.trace import trace as _obs_trace
 
 ModelsArg = Union[ModelLibrary, Mapping[str, ModelLibrary]]
 
@@ -480,6 +481,7 @@ class RateDecision:
     estimated_slots: int         # slot estimate at the planned rate
 
 
+@_obs_trace("replan_incremental")
 def replan_incremental(cache: SlotSurfaceCache, names: Sequence[str], *,
                        budget_slots: int, objective: str = "max_min",
                        weights: Optional[Mapping[str, float]] = None,
@@ -669,6 +671,7 @@ def _models_for(models: ModelsArg, name: str) -> ModelLibrary:
     return models[name]
 
 
+@_obs_trace("plan_fleet")
 def plan_fleet(dags, models: ModelsArg, *, budget_slots: Optional[int] = None,
                budget_dollars: Optional[float] = None,
                objective: str = "max_min",

@@ -34,6 +34,13 @@ one at a time with :meth:`FleetController.apply`:
 ``RateChange``  a DAG's offered load changed: its planned rate is capped at
                 the new ceiling (``None`` removes the cap), releasing — or
                 reclaiming — budget for the rest of the fleet.
+``ModelRefresh`` the planning tables were replaced (recalibration from
+                measured rates, see :mod:`repro.core.calibrate`): every
+                live DAG's slot surface is recomputed against the new
+                models and every schedule is rebuilt on its incumbent VMs.
+                :meth:`FleetController.recalibrate` is the usual entry
+                point; ``LiveFleet`` fires it automatically from its own
+                ``DriftAlert`` stream when given an ``AutoRecalPolicy``.
 
 Incremental replanning
 ----------------------
@@ -108,6 +115,8 @@ from .predictor import (build_group_index, predict_max_rate_gi,
                         predict_resources_sweep)
 from .routing import RoutingPolicy
 from .scheduler import MAX_EXTRA_SLOTS, Schedule, plan, replan_on_failure
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import span as _obs_span
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +157,20 @@ class RateChange:
     max_rate: Optional[float]
 
 
-Event = Union[DagArrive, DagDepart, VmFail, VmAdd, RateChange]
+@dataclasses.dataclass(frozen=True)
+class ModelRefresh:
+    """The planning tables were replaced (model recalibration).
+
+    Every live DAG's slot surface is recomputed against the controller's
+    *current* ``models`` and every schedule rebuilt on its incumbent VMs;
+    rates re-level exactly as any other event.  ``kinds`` names the task
+    kinds whose tables actually changed (informational, for the log)."""
+
+    kinds: Tuple[str, ...] = ()
+    reason: str = ""
+
+
+Event = Union[DagArrive, DagDepart, VmFail, VmAdd, RateChange, ModelRefresh]
 
 
 @dataclasses.dataclass
@@ -187,6 +209,8 @@ class ControllerRecord:
     replan_latency_s: float          # wall time of the whole apply()
     stable: Optional[Dict[str, bool]] = None   # co-sim verdict per DAG
     fleet_cost_per_hour: float = 0.0  # $/hour of the acquired pool, post-event
+    drift_alerts: int = 0            # DriftAlerts consumed at this event
+    recalibrated: bool = False       # event was a ModelRefresh (recal enacted)
 
     @property
     def kind(self) -> str:
@@ -344,6 +368,10 @@ class FleetController:
         docstring).  A rejected arrival (:class:`UnsupportableDagError`)
         raises AND leaves the controller state exactly as before.
         """
+        with _obs_span("controller.apply", kind=type(event).__name__):
+            return self._apply(event, at)
+
+    def _apply(self, event: Event, at: Optional[float]) -> ControllerRecord:
         t0 = time.perf_counter()
         if self.self_size:
             # demand ceilings ARE the budget signal: every live DAG must
@@ -395,6 +423,13 @@ class FleetController:
             # tolerate a failure notice for an already-released VM (a
             # depart racing the notice): it is a recorded no-op
             failed_vm = int(event.vm_id)
+        elif isinstance(event, ModelRefresh):
+            # new tables invalidate every cached surface: recompute them
+            # all (each counts as a batch pass in the record)
+            for name in list(self._dags):
+                self.cache.drop(name)
+                self.cache.surface(name, self._dags[name],
+                                   _models_for(self.models, name))
         else:
             raise TypeError(f"unknown fleet event {event!r}")
 
@@ -419,6 +454,7 @@ class FleetController:
         changed: List[str] = []
         migrated = 0
         slots_moved = 0
+        refreshed = isinstance(event, ModelRefresh)
         new_entries: Dict[str, FleetEntry] = {}
         for name in names:
             dec = decisions[name]
@@ -427,7 +463,8 @@ class FleetController:
                            and old.schedule is not None
                            and any(vm.id == failed_vm
                                    for vm in old.schedule.vms))
-            if old is not None and old.omega == dec.omega and not hit_by_fail:
+            if (old is not None and old.omega == dec.omega
+                    and not hit_by_fail and not refreshed):
                 new_entries[name] = old      # untouched: bit-identical
                 continue
             lib = _models_for(self.models, name)
@@ -469,14 +506,32 @@ class FleetController:
             slots_moved=slots_moved,
             batch_passes=self.cache.stats["batch_passes"] - passes0,
             replan_latency_s=time.perf_counter() - t0,
-            fleet_cost_per_hour=pool_cost_per_hour(self.pool))
+            fleet_cost_per_hour=pool_cost_per_hour(self.pool),
+            recalibrated=refreshed)
         self.log.records.append(record)
+        if _obs_metrics.REGISTRY.enabled:
+            _obs_metrics.observe_controller_record(record)
         if resolve_validate(self.validate):
             # O(changed): untouched entries skip their schedule walks
             from repro.analysis.verify import verify_controller
             raise_if_errors(verify_controller(self, changed=changed),
                             f"FleetController.apply({type(event).__name__})")
         return record
+
+    def recalibrate(self, library: ModelsArg, *,
+                    at: Optional[float] = None,
+                    kinds: Sequence[str] = (),
+                    reason: str = "") -> ControllerRecord:
+        """Install recalibrated planning tables and refresh the fleet.
+
+        Swaps ``self.models`` for ``library`` (any :data:`ModelsArg`
+        form), then applies a :class:`ModelRefresh` event so every cached
+        slot surface is recomputed and every schedule rebuilt against the
+        new tables.  Returns that event's :class:`ControllerRecord`
+        (``recalibrated=True``)."""
+        self.models = library
+        return self.apply(ModelRefresh(kinds=tuple(kinds), reason=reason),
+                          at=at)
 
     def replay(self, trace: EventTrace, *, simulate: bool = False,
                **sim_kwargs) -> ControllerLog:

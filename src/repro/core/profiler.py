@@ -20,14 +20,16 @@ Two runner flavours:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 import queue as queue_mod
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .perfmodel import (ModelLibrary, PerfModel, TrialResult, build_perf_model,
                         latency_slope)
+from ..obs import clock as _obs_clock
 
 
 # ---------------------------------------------------------------------------
@@ -123,17 +125,83 @@ class LiveTrialRunner:
     per tuple = completion - scheduled-arrival.  CPU% is estimated as
     busy-time / wall-time (capped at 1.0 = the slot's core); memory% uses a
     per-kind per-thread footprint estimate.
+
+    Time is read through the shared telemetry clock seam
+    (:mod:`repro.obs.clock`) unless an explicit ``clock`` is passed.  Under
+    a **virtual** clock the threaded wall-time trial makes no sense (real
+    thread scheduling against frozen time is nondeterministic and all busy
+    windows read as zero), so the runner switches to a deterministic
+    discrete-event replay: ``tau`` servers, per-tuple ``service_time``
+    (required in virtual mode), latencies computed in closed form and the
+    clock advanced past the drain — identical results on every replay.
     """
 
     def __init__(self, make_op: Callable[[], Callable[[], object]],
                  *, trial_seconds: float = 0.4, mem_per_thread: float = 0.02,
-                 mem_base: float = 0.02):
+                 mem_base: float = 0.02, clock: Optional[Any] = None,
+                 service_time: Optional[float] = None):
         self.make_op = make_op
         self.trial_seconds = trial_seconds
         self.mem_per_thread = mem_per_thread
         self.mem_base = mem_base
+        self.clock = clock             # None -> the repro.obs.clock seam
+        self.service_time = service_time   # priced tuple cost, virtual mode
+
+    # -- clock plumbing --------------------------------------------------
+    def _now(self) -> float:
+        return _obs_clock.now() if self.clock is None else float(
+            self.clock.now())
+
+    def _sleep(self, seconds: float) -> None:
+        if self.clock is None:
+            _obs_clock.sleep(seconds)
+        elif seconds > 0:
+            self.clock.sleep(seconds)
+
+    def _virtual(self) -> bool:
+        if self.clock is None:
+            return _obs_clock.is_virtual()
+        return bool(getattr(self.clock, "virtual", False))
 
     def __call__(self, tau: int, omega: float) -> TrialResult:
+        if self._virtual():
+            return self._virtual_trial(tau, omega)
+        return self._live_trial(tau, omega)
+
+    # -- deterministic replay path (virtual clock) -----------------------
+    def _virtual_trial(self, tau: int, omega: float) -> TrialResult:
+        service = self.service_time
+        if service is None or service <= 0:
+            raise ValueError(
+                "LiveTrialRunner under a virtual clock needs a positive "
+                "service_time to price tuples (real thread timing is "
+                "meaningless against frozen time)")
+        start = self._now()
+        n_tuples = max(4, int(omega * self.trial_seconds))
+        interval = 1.0 / omega
+        free = [start] * tau           # per-server next-available times
+        heapq.heapify(free)
+        lat: List[float] = []
+        last_completion = start
+        for i in range(n_tuples):
+            arrival = start + i * interval
+            begin = max(arrival, heapq.heappop(free))
+            completion = begin + service
+            heapq.heappush(free, completion)
+            lat.append(completion - arrival)
+            if completion > last_completion:
+                last_completion = completion
+        wall = max(last_completion, start + n_tuples * interval) - start
+        self._sleep(wall)              # the trial occupies virtual time
+        busy = n_tuples * service
+        cpu = min(1.0, busy / max(wall, 1e-9))
+        mem = self.mem_base + self.mem_per_thread * tau
+        rate = n_tuples / max(wall, 1e-9)
+        return TrialResult(cpu=cpu, mem=mem, latencies=lat,
+                           supported_rate=rate)
+
+    # -- real execution path (wall clock) --------------------------------
+    def _live_trial(self, tau: int, omega: float) -> TrialResult:
         op = self.make_op()
         work_q: "queue_mod.Queue[Optional[float]]" = queue_mod.Queue()
         done: List[Tuple[float, float]] = []   # (arrival, completion)
@@ -152,12 +220,12 @@ class LiveTrialRunner:
                     continue
                 if item is None:
                     return
-                t0 = time.perf_counter()
+                t0 = self._now()
                 try:
                     op()
                 except Exception:
                     continue             # lost tuple: no completion record
-                t1 = time.perf_counter()
+                t1 = self._now()
                 busy[k] += t1 - t0
                 with done_lock:
                     done.append((item, t1))
@@ -166,32 +234,32 @@ class LiveTrialRunner:
                    for k in range(tau)]
         for t in threads:
             t.start()
-        start = time.perf_counter()
+        start = self._now()
         n_tuples = max(4, int(omega * self.trial_seconds))
         interval = 1.0 / omega
         for i in range(n_tuples):
             sched = start + i * interval
-            now = time.perf_counter()
+            now = self._now()
             if sched > now:
-                time.sleep(sched - now)
+                self._sleep(sched - now)
             work_q.put(sched)
         # allow drain up to 2x trial time, then terminate
-        deadline = time.perf_counter() + 2 * self.trial_seconds
-        while not work_q.empty() and time.perf_counter() < deadline:
-            time.sleep(0.005)
+        deadline = self._now() + 2 * self.trial_seconds
+        while not work_q.empty() and self._now() < deadline:
+            self._sleep(0.005)
         for _ in threads:
             work_q.put(None)
         # hard deadline for teardown: a worker wedged inside op() cannot
         # hold the trial (or the tier-1 suite) hostage — stop the rest and
         # abandon the wedged daemon thread
-        join_deadline = time.perf_counter() + max(1.0, self.trial_seconds)
+        join_deadline = self._now() + max(1.0, self.trial_seconds)
         for t in threads:
-            t.join(timeout=max(0.0, join_deadline - time.perf_counter()))
+            t.join(timeout=max(0.0, join_deadline - self._now()))
         stop.set()
         for t in threads:
             if t.is_alive():
                 t.join(timeout=0.1)
-        wall = time.perf_counter() - start
+        wall = self._now() - start
         with done_lock:
             lat = [c - a for a, c in sorted(done)]
         completed = len(lat)

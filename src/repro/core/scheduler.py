@@ -23,6 +23,7 @@ from .mapping import (DEFAULT_VM_SIZES, MAPPERS, PRICE_PER_SLOT_HOUR,
 from .perfmodel import ModelLibrary
 from .predictor import predict_max_rate, predict_resources
 from .routing import RoutingPolicy
+from ..obs.trace import trace as _obs_trace
 
 #: Give up after this many +1-slot retries (a mapper that cannot place with
 #: 4x the estimate is a bug, not fragmentation).
@@ -89,6 +90,7 @@ class Schedule:
         return "\n".join(lines)
 
 
+@_obs_trace("plan")
 def plan(dag: Dataflow, omega: float, models: ModelLibrary,
          *, allocator: str = "mba", mapper: str = "sam",
          vm_sizes: VmSizesArg = DEFAULT_VM_SIZES,

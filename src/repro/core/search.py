@@ -67,6 +67,7 @@ from .perfmodel import ModelLibrary
 from .predictor import (GroupIndex, build_group_index,
                         effective_capacity_matrix, predict_max_rate_gi)
 from .routing import RoutingPolicy
+from ..obs.trace import trace as _obs_trace
 from .simulator import (STABLE_SLOPE_PER_S, DataflowSimulator, SweepRaw,
                         _slope_columns, _sweep_steps, edge_hop_latencies,
                         get_scan_kernel)
@@ -354,6 +355,7 @@ def _judge_raw(raw: SweepRaw) -> Tuple[np.ndarray, np.ndarray]:
 # The search.
 # ---------------------------------------------------------------------------
 
+@_obs_trace("search_mapping")
 def search_mapping(dag: Dataflow, omega: float, models: ModelLibrary, *,
                    allocator: str = "mba",
                    allocation: Optional[Allocation] = None,

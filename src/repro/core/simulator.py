@@ -71,6 +71,8 @@ from .perfmodel import ModelLibrary
 from .predictor import (GroupIndex, build_group_index, effective_capacities,
                         effective_capacity_matrix, slot_groups)
 from .routing import RoutingPolicy, group_rates
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import span as _obs_span
 
 #: Network hop latencies (s): same slot / same VM / cross VM.
 HOP_SAME_SLOT = 0.0002
@@ -120,6 +122,27 @@ def scan_kernel_cache_clear() -> None:
         _KERNEL_STATS["hits"] = _KERNEL_STATS["misses"] = 0
 
 
+def _kernel_cache_collector(registry: "_obs_metrics.MetricsRegistry") -> None:
+    """Pull-style obs bridge: publish cache stats at snapshot time."""
+    stats = scan_kernel_cache_stats()
+    registry.gauge("repro_scan_kernel_cache_entries",
+                   "Distinct compiled scan-kernel structures cached."
+                   ).set(stats["entries"])
+    registry.gauge("repro_scan_kernel_cache_hits_total",
+                   "Scan-kernel cache lookups served from cache."
+                   ).set(stats["hits"])
+    registry.gauge("repro_scan_kernel_cache_misses_total",
+                   "Scan-kernel cache lookups that compiled."
+                   ).set(stats["misses"])
+    lookups = stats["hits"] + stats["misses"]
+    registry.gauge("repro_scan_kernel_cache_hit_ratio",
+                   "hits / (hits + misses) of the scan-kernel cache."
+                   ).set(stats["hits"] / lookups if lookups else 0.0)
+
+
+_obs_metrics.register_collector(_kernel_cache_collector)
+
+
 def _kernel_key(row_slices, in_edges, sink_groups, n_slots: int,
                 batched: bool) -> tuple:
     return (bool(batched), int(n_slots),
@@ -138,8 +161,10 @@ def get_scan_kernel(row_slices, in_edges, sink_groups, n_slots: int,
         fn = _KERNEL_CACHE.get(key)
         if fn is None:
             _KERNEL_STATS["misses"] += 1
-            fn = _make_scan_kernel(row_slices, in_edges, sink_groups, n_slots,
-                                   batched=batched)
+            with _obs_span("scan_kernel_compile", slots=int(n_slots),
+                           batched=bool(batched)):
+                fn = _make_scan_kernel(row_slices, in_edges, sink_groups,
+                                       n_slots, batched=batched)
             _KERNEL_CACHE[key] = fn
         else:
             _KERNEL_STATS["hits"] += 1

@@ -35,12 +35,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
-from ..core.calibrate import (CalibrationResult, DriftAlert, TaskMeasurement,
-                              detect_drift, recalibrate)
+from ..core.calibrate import (AutoRecalPolicy, CalibrationResult, DriftAlert,
+                              TaskMeasurement, detect_drift, rate_error,
+                              recalibrate)
 from ..core.diagnostics import raise_if_errors, resolve_validate
 from ..core.fleet import _models_for
 from ..core.online import (ControllerRecord, Event, EventTrace,
                            FleetController, VmFail)
+from ..obs import clock as _obs_clock
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import span as _obs_span
 from ..core.perfmodel import ModelLibrary
 from ..core.scheduler import Schedule
 from .chaos import FaultInjector, FaultPlan, FaultTimeline
@@ -103,6 +107,9 @@ class EnactRecord:
     escalations: List[Tuple[str, int]]   # breaker-tripped (dag, vm_id)
     repairs: List[ControllerRecord]      # synthetic VmFail records
     recovery_reports: Dict[str, ExecutionReport]
+    drift_magnitude: float = 0.0         # EWMA-damped measured rate error
+    drift_alerts: int = 0                # DriftAlerts consumed this event
+    recalibration: Optional[ControllerRecord] = None  # ModelRefresh enacted
 
     @property
     def rates(self) -> Dict[str, float]:
@@ -167,6 +174,7 @@ class LiveFleet:
                  robustness: Optional[RobustnessPolicy] = None,
                  frames_per_event: int = 8, batch: int = 16,
                  warmup_frames: int = 2, source_seed: int = 0,
+                 auto_recal: Optional[AutoRecalPolicy] = None,
                  validate: Optional[bool] = None):
         self.ctl = controller
         self.plan_faults = (fault_plan if fault_plan is not None
@@ -178,9 +186,14 @@ class LiveFleet:
         self.batch = int(batch)
         self.warmup_frames = int(warmup_frames)
         self.source_seed = int(source_seed)
+        self.auto_recal = auto_recal
         self.validate = validate
         self.executors: Dict[str, StreamExecutor] = {}
         self.log = EnactmentLog()
+        # closed-loop auto-recalibration state (see AutoRecalPolicy)
+        self._drift_ewma = 0.0
+        self.recal_ticks: List[int] = []          # log indices of recals
+        self.recalibrations: List[CalibrationResult] = []
 
     # -- helpers ---------------------------------------------------------------
     def _truth_for(self, name: str) -> Optional[ModelLibrary]:
@@ -224,8 +237,10 @@ class LiveFleet:
                 # identity rail: rate-unchanged DAG, executor untouched
                 untouched.append(name)
             else:
-                rebound[name] = ex.rebind(
-                    sched, transplants=transplant_map(ex.schedule, sched))
+                transplants = transplant_map(ex.schedule, sched)
+                with _obs_span("fleet.rebind", dag=name,
+                               transplants=len(transplants)):
+                    rebound[name] = ex.rebind(sched, transplants=transplants)
         if resolve_validate(self.validate):
             from ..analysis.verify import verify_enactment
             raise_if_errors(verify_enactment(self))
@@ -250,7 +265,17 @@ class LiveFleet:
     # -- event application -----------------------------------------------------
     def apply(self, event: Event, at: Optional[float] = None) -> EnactRecord:
         """Advance controller + executors by one event, run measurement
-        windows, and resolve any breaker escalations to completion."""
+        windows, and resolve any breaker escalations to completion.
+
+        The fleet's clock is installed as the telemetry clock for the
+        whole tick, so spans recorded anywhere below (controller replans,
+        rebinds, executor windows) carry virtual timestamps and two
+        replays of one chaos seed produce bit-identical traces."""
+        with _obs_clock.use_clock(self.clock), \
+                _obs_span("fleet.tick", kind=type(event).__name__):
+            return self._apply(event, at)
+
+    def _apply(self, event: Event, at: Optional[float]) -> EnactRecord:
         crec = self.ctl.apply(event, at=at)
         spawned, retired, untouched, rebound = self._sync()
         reports = self._measure()
@@ -275,13 +300,100 @@ class LiveFleet:
                                  else _merge_rebinds(prev, info))
             recovery.update(self._measure(sorted(set(touched))))
 
+        magnitude, n_alerts, rrec, re_rebound = self._maybe_recalibrate(
+            crec, {**reports, **recovery})
+        for name, info in re_rebound.items():
+            prev = rebound.get(name)
+            rebound[name] = (info if prev is None
+                             else _merge_rebinds(prev, info))
+
         record = EnactRecord(
             time=crec.time, controller=crec, spawned=spawned,
             retired=retired, untouched=untouched, rebound=rebound,
             reports=reports, escalations=escalations, repairs=repairs,
-            recovery_reports=recovery)
+            recovery_reports=recovery, drift_magnitude=magnitude,
+            drift_alerts=n_alerts, recalibration=rrec)
         self.log.records.append(record)
+        if (self.auto_recal is not None and rrec is not None
+                and resolve_validate(self.validate)):
+            from ..analysis.verify import verify_autorecal
+            raise_if_errors(verify_autorecal(self), "LiveFleet.apply")
         return record
+
+    # -- closed-loop auto-recalibration ----------------------------------------
+    def _maybe_recalibrate(
+            self, crec: ControllerRecord,
+            reports: Dict[str, ExecutionReport],
+    ) -> Tuple[float, int, Optional[ControllerRecord],
+               Dict[str, RebindInfo]]:
+        """Consume the fleet's own drift signal; enact a recalibration.
+
+        The per-event measured rate error is EWMA-damped; once the damped
+        magnitude crosses the policy threshold (and the cooldown allows),
+        the fleet confirms against its :meth:`drift` alert stream and
+        folds the measurement window into the planning tables via
+        :meth:`FleetController.recalibrate` — a ``ModelRefresh`` event
+        that re-levels every rate and rebuilds every schedule.  Executor
+        measurement windows reset so the next drift window scores the
+        *new* tables."""
+        policy = self.auto_recal
+        if policy is None or self.frames_per_event <= 0:
+            return self._drift_ewma, 0, None, {}
+        models = self.ctl.models
+        samples = self.measurements()
+        if not isinstance(models, ModelLibrary) or not samples:
+            return self._drift_ewma, 0, None, {}
+        magnitude = rate_error(models, samples)
+        s = policy.smoothing
+        self._drift_ewma = (1.0 - s) * self._drift_ewma + s * magnitude
+        if _obs_metrics.REGISTRY.enabled:
+            _obs_metrics.gauge(
+                "repro_drift_magnitude",
+                "EWMA-damped measured-vs-table rate error.",
+                ).set(self._drift_ewma)
+        if self._drift_ewma <= policy.threshold:
+            return self._drift_ewma, 0, None, {}
+        tick = len(self.log.records)     # index of the record being built
+        if (self.recal_ticks
+                and tick - self.recal_ticks[-1] < policy.cooldown_events):
+            if _obs_metrics.REGISTRY.enabled:
+                _obs_metrics.counter(
+                    "repro_auto_recal_suppressed_total",
+                    "Recalibrations withheld by the cooldown.").inc()
+            return self._drift_ewma, 0, None, {}
+        alerts: List[DriftAlert] = []
+        if policy.confirm_with_drift:
+            alerts = self.drift(extra_reports=reports)
+            if not alerts:
+                return self._drift_ewma, 0, None, {}
+        result = recalibrate(models, samples, alpha=policy.alpha,
+                             validate=self.validate)
+        if not result.changed_kinds:
+            return self._drift_ewma, len(alerts), None, {}
+        with _obs_span("fleet.recalibrate",
+                       kinds=",".join(result.changed_kinds)):
+            rrec = self.ctl.recalibrate(
+                result.library, at=crec.time,
+                kinds=result.changed_kinds,
+                reason=f"auto: drift {self._drift_ewma:.3f} > "
+                       f"{policy.threshold:.3f}")
+            _, _, _, re_rebound = self._sync()
+        crec.drift_alerts = len(alerts)
+        rrec.drift_alerts = len(alerts)
+        self.recalibrations.append(result)
+        self.recal_ticks.append(tick)
+        for name, ex in self.executors.items():
+            ex.models = _models_for(self.ctl.models, name)
+            ex.reset_measurements()    # next window scores the new tables
+        damped = self._drift_ewma
+        self._drift_ewma = 0.0
+        if _obs_metrics.REGISTRY.enabled:
+            # (repro_auto_recalibrations_total is bridged off the rrec
+            # ControllerRecord itself, recalibrated=True, at apply time)
+            _obs_metrics.counter(
+                "repro_drift_alerts_total",
+                "DriftAlerts raised by the live fleet.").inc(len(alerts))
+        return damped, len(alerts), rrec, re_rebound
 
     def replay(self, trace: EventTrace) -> EnactmentLog:
         """Enact a whole event trace in time order."""
@@ -308,13 +420,17 @@ class LiveFleet:
         return recalibrate(models, self.measurements(), alpha=alpha, tol=tol,
                            validate=self.validate)
 
-    def drift(self, **cosim_kwargs) -> List[DriftAlert]:
+    def drift(self, extra_reports: Optional[Mapping[str, ExecutionReport]]
+              = None, **cosim_kwargs) -> List[DriftAlert]:
         """Compare measured stability (latest reports) against the
-        controller's co-simulation verdicts."""
+        controller's co-simulation verdicts.  ``extra_reports`` lets the
+        in-flight event's windows participate before they are logged."""
         latest: Dict[str, ExecutionReport] = {}
         for rec in self.log.records:
             latest.update(rec.reports)
             latest.update(rec.recovery_reports)
+        if extra_reports:
+            latest.update(extra_reports)
         if not latest or not self.ctl.dag_names:
             return []
         report = self.ctl.cosimulate(**cosim_kwargs)

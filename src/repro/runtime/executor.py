@@ -53,6 +53,8 @@ from ..core.perfmodel import ModelLibrary, latency_slope
 from ..core.predictor import slot_groups
 from ..core.routing import RoutingPolicy
 from ..core.scheduler import Schedule
+from ..obs import metrics as _obs_metrics
+from ..obs.trace import span as _obs_span
 from .chaos import FaultInjector, FaultKind, InjectedOperatorError
 from .operators import OPERATORS, SERVICE_LATENCY
 from .stream import MicroBatch, SyntheticSource, VirtualClock, WallClock
@@ -458,6 +460,18 @@ class StreamExecutor:
     def run(self, omega: float, *, duration: float = 2.0,
             batch: int = 32, warmup_frames: int = 2,
             n_frames: Optional[int] = None, seed: int = 0) -> ExecutionReport:
+        with _obs_span("executor.run", dag=self.schedule.dag.name,
+                       omega=float(omega)):
+            report = self._run(omega, duration=duration, batch=batch,
+                               warmup_frames=warmup_frames,
+                               n_frames=n_frames, seed=seed)
+        if _obs_metrics.REGISTRY.enabled:
+            _obs_metrics.observe_execution_report(report)
+        return report
+
+    def _run(self, omega: float, *, duration: float = 2.0,
+             batch: int = 32, warmup_frames: int = 2,
+             n_frames: Optional[int] = None, seed: int = 0) -> ExecutionReport:
         source = SyntheticSource(omega, batch=batch, seed=seed,
                                  clock=self.clock,
                                  start_seq=self.frames_seen)
